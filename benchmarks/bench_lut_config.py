@@ -1,0 +1,52 @@
+"""Paper Table I + Fig. 16: LUT sizes and reduction FLOPs, ours vs WOQ LUT-GEMM.
+
+Analytic reproduction with the paper's formulas (Table I):
+  WOQ inner-product LUT : size 2^mu * K/mu entries, reduction K/mu * n_W FLOPs/output
+  Ours (Cartesian)      : size 2^(nA+nW) entries (K-independent),
+                          reduction 2^(nA+nW) FLOPs/output
+Checked claims (K=N=4096, W4A4): 64x LUT reduction, 1024x group size,
+16x reduction-FLOPs — asserted, not just printed.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.lut_gemm import reduction_flops_counting, waq_lut_size, woq_lut_size
+
+# q_proj GEMM dims per LLaMA size (Fig. 16): K = d_model
+LLAMA_DIMS = {"7B": 4096, "13B": 5120, "30B": 6656, "65B/70B": 8192}
+MU = 4  # WOQ group size (FIGLUT / LUT Tensor Core setting)
+N_W = N_A = 4
+
+
+def run() -> None:
+    print("# Table I / Fig 16 — LUT size (bytes) and reduction FLOPs per output column")
+    print("model,K,woq_lut_B,ours_lut_B,lut_ratio,woq_red_flops,ours_red_flops,flops_ratio")
+    for name, k in LLAMA_DIMS.items():
+        woq_b = woq_lut_size(MU, k)
+        ours_b = waq_lut_size(N_A, N_W)
+        woq_fl = (k // MU) * N_W  # K/mu * n_W per output (Table I, N=1 column)
+        ours_fl = 2 ** (N_A + N_W)
+        print(f"{name},{k},{woq_b},{ours_b},{woq_b/ours_b:.0f},{woq_fl},{ours_fl},{woq_fl/ours_fl:.1f}")
+
+    # --- the paper's three headline ratios at K=N=4096 -----------------------
+    k = 4096
+    lut_ratio = woq_lut_size(MU, k) / waq_lut_size(N_A, N_W)
+    group_ratio = k / MU  # our group size = K vs mu
+    flops_ratio = ((k // MU) * N_W) / (2 ** (N_A + N_W))
+    assert lut_ratio == 64.0, lut_ratio
+    assert group_ratio == 1024.0, group_ratio
+    assert flops_ratio == 16.0, flops_ratio
+    emit("table1_lut_ratio_K4096", 0.0, f"64x_claim_verified={lut_ratio:.0f}x")
+    emit("table1_group_ratio_K4096", 0.0, f"1024x_claim_verified={group_ratio:.0f}x")
+    emit("table1_flops_ratio_K4096", 0.0, f"16x_claim_verified={flops_ratio:.0f}x")
+
+    # reduction-FLOPs growth with model scale (Fig. 16 trend: ours ~constant)
+    growth_woq = ((8192 // MU) * N_W) / ((4096 // MU) * N_W)
+    growth_ours = 1.0
+    emit("fig16_flops_growth_7B_to_70B", 0.0,
+         f"woq={growth_woq:.1f}x ours={growth_ours:.1f}x (K-independent LUT)")
+
+
+if __name__ == "__main__":
+    run()

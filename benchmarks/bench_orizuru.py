@@ -1,0 +1,35 @@
+"""Orizuru engine benchmark (paper §IV-D + the 1.5N + 2k*log2N claim).
+
+Comparison-count accounting vs the SpAtten-style 6N baseline, plus kernel
+wall-time of the Pallas Orizuru (interpret mode — correctness-grade timing on
+CPU; real timing is a TPU run) against jax.lax.top_k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core.outlier import naive_topk_comparisons, orizuru_comparisons
+from repro.kernels.topk_outlier import topk_outlier_kernel_call
+
+
+def run() -> None:
+    print("# Orizuru comparison counts — ours vs SpAtten-style 6N")
+    print("N,k,orizuru,naive6N,ratio")
+    for n in (1024, 4096, 12288):
+        k = max(1, int(0.005 * n))
+        o, s = orizuru_comparisons(n, k), naive_topk_comparisons(n)
+        print(f"{n},{k},{o},{s},{s/o:.2f}")
+        assert o < s
+    emit("orizuru_comparisons_4096", 0.0,
+         f"{orizuru_comparisons(4096, 20)} vs 6N={naive_topk_comparisons(4096)}")
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
+    us_kernel = timed(lambda a: topk_outlier_kernel_call(a, 20, block_m=8)[0], x, reps=2)
+    us_lax = timed(lambda a: jax.lax.top_k(a, 20)[0], x, reps=2)
+    emit("orizuru_kernel_interpret_us", us_kernel, f"lax_top_k_us={us_lax:.0f} (CPU interpret)")
+
+
+if __name__ == "__main__":
+    run()

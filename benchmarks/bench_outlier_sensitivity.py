@@ -1,0 +1,32 @@
+"""Paper Fig. 15(a): PPL vs outlier percentage (0.5% .. 10%).
+
+More preserved outliers -> monotonically better CE (up to noise), with
+diminishing returns — the accuracy half of the paper's accuracy/throughput
+trade-off (the throughput half is bench_pipeline.py)."""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, eval_ce, trained_lm
+from repro.core.qlinear import QLinearConfig
+
+
+def run() -> None:
+    cfg, model, params, corpus = trained_lm()
+    print("# Fig 15a analog — CE/PPL vs outlier fraction (per side)")
+    print("outlier_pct,ce,ppl")
+    ces = {}
+    for pct in (0.0, 0.5, 1.0, 2.0, 5.0, 10.0):
+        ce = eval_ce(model, params, corpus,
+                     QLinearConfig(detection="dynamic", outlier_frac=pct / 100))
+        ces[pct] = ce
+        print(f"{pct},{ce:.4f},{math.exp(ce):.2f}")
+    assert ces[10.0] <= ces[0.5] + 0.02, "more outliers must not hurt CE"
+    assert ces[0.5] <= ces[0.0] + 1e-6, "outlier handling must help vs none"
+    emit("fig15a_gain_0.5pct_vs_none", 0.0, f"ce_gain={ces[0.0]-ces[0.5]:.4f}")
+    emit("fig15a_gain_10pct_vs_0.5pct", 0.0, f"ce_gain={ces[0.5]-ces[10.0]:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,102 @@
+"""Shared benchmark infrastructure.
+
+``trained_lm()`` trains (once, then caches on disk) the small byte-level LM
+that the accuracy benchmarks quantize — the in-repo stand-in for the paper's
+LLaMA/OPT evaluations (no pretrained checkpoints offline). Text = this repo's
+own sources (ByteCorpus); held-out evaluation uses a disjoint crop seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.configs.base import get_smoke_config
+from repro.core.qlinear import QLinearConfig
+from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline
+from repro.models.model import build
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer, make_eval_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+CKPT_DIR = RESULTS / "bench_lm"
+
+_TC = TrainConfig(optimizer=AdamWConfig(lr=2e-3), microbatches=1,
+                  warmup_steps=30, total_steps=800, checkpoint_every=400)
+
+
+def bench_lm_config():
+    cfg = get_smoke_config("oasis_7b")
+    return dataclasses.replace(cfg, n_layers=3, d_model=128, n_heads=4,
+                               n_kv_heads=4, head_dim=32, d_ff=256)
+
+
+def trained_lm(steps: int = 800):
+    """(cfg, model, params, corpus) — trained once, cached in results/."""
+    cfg = bench_lm_config()
+    model = build(cfg)
+    corpus = ByteCorpus()
+    pipe = TokenPipeline(corpus.tokens, DataConfig(seq_len=64, global_batch=16, seed=0))
+    trainer = Trainer(model, _TC, pipe, ckpt_dir=str(CKPT_DIR))
+    if trainer.step < steps:
+        trainer.run(steps - trainer.step, log_every=100)
+    return cfg, model, trainer.state["params"], corpus
+
+
+def eval_ce(model, params, corpus, qcfg: QLinearConfig | None = None,
+            batches: int = 4, seed: int = 123, calib=None) -> float:
+    """Held-out cross-entropy (PPL = exp(ce)); quantizes first if qcfg given.
+
+    The SAME qcfg governs apply-time behaviour (detection mode, outlier
+    budget) via use_apply_config — quantize-time and apply-time configs must
+    match or detection sweeps silently no-op."""
+    from repro.core.qlinear import use_apply_config
+
+    if qcfg is not None:
+        params = model.quantize(params, qcfg, calib=calib)
+    eval_step = jax.jit(make_eval_step(model, _TC))
+    pipe = TokenPipeline(corpus.tokens, DataConfig(seq_len=64, global_batch=16, seed=seed))
+    ces = []
+    with use_apply_config(qcfg or QLinearConfig()):
+        for _ in range(batches):
+            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            ces.append(float(eval_step(params, batch)["ce"]))
+    return float(np.mean(ces))
+
+
+def capture_activations(model, params, corpus, n_batches: int = 2, seed: int = 7):
+    """Run the tapped forward (non-jit, UNSCANNED) -> {tap_name: (tokens, K)}.
+
+    Scan bodies are traced even outside jit, so taps only fire on the
+    unrolled model variant (model.unstack_for_capture)."""
+    from repro.core import calibration
+    from repro.models.model import unstack_for_capture
+
+    model_u, params_u = unstack_for_capture(model, params)
+    pipe = TokenPipeline(corpus.tokens, DataConfig(seq_len=64, global_batch=4, seed=seed))
+    with calibration.capture() as store:
+        for _ in range(n_batches):
+            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            model_u.apply(params_u, {"tokens": batch["tokens"][:, :-1]})
+    acts = calibration.captured(store)
+    assert acts, "calibration capture returned nothing (tap plumbing broken)"
+    return acts
+
+
+def timed(fn, *args, reps: int = 3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+Emits ``name,us_per_call,derived`` CSV lines (plus each module's own tables).
+Run: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_lut_config",        # Table I + Fig 16
+    "bench_ppl",               # Table III/IV
+    "bench_throughput",        # Fig 11/12/13
+    "bench_pipeline",          # Fig 14 + Fig 15(b,c)
+    "bench_outlier_sensitivity",  # Fig 15(a)
+    "bench_calibration",       # Fig 17
+    "bench_offline_online",    # Fig 3 + Fig 5
+    "bench_orizuru",           # §IV-D comparison counts
+]
+
+
+def main() -> None:
+    only = set(sys.argv[1:])
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"--- {name} ok in {time.time()-t0:.1f}s")
+        except Exception:  # noqa: BLE001 — report, continue, fail at end
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving driver: batched requests against a K-Means-quantized model.
+
+Trains a tiny LM briefly (so generations aren't pure noise), quantizes it
+W4A4 + dynamic outliers + int4 K-Means KV cache, and serves a batch of
+prompts through the prefill/decode engine — the paper's full inference path.
+
+Run: PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.core.qlinear import QLinearConfig
+from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline
+from repro.models.model import build
+from repro.optim.adamw import AdamWConfig
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main() -> None:
+    cfg = get_smoke_config("oasis_7b")
+    model = build(cfg)
+    corpus = ByteCorpus()
+    print("== warm up the model on repo text (200 steps) so decode is non-trivial")
+    trainer = Trainer(
+        model,
+        TrainConfig(optimizer=AdamWConfig(lr=2e-3), warmup_steps=20, total_steps=200),
+        TokenPipeline(corpus.tokens, DataConfig(seq_len=64, global_batch=16, seed=0)),
+    )
+    trainer.run(200, log_every=100)
+    params = trainer.state["params"]
+
+    print("== quantize: W4A4 K-Means + dynamic outliers (paper serving config)")
+    qcfg = QLinearConfig(detection="dynamic", outlier_frac=0.005)
+    qparams = model.quantize(params, qcfg)
+
+    engine = ServingEngine(
+        model,
+        qparams,
+        ServeConfig(cache_len=128, qconfig=qcfg, kv_quant=True, cache_dtype="float32"),
+        batch_slots=4,
+    )
+    prompts_text = ["def quantize(", "import jax", "class Model", "# The paper",
+                    "return x @ w"]
+    prompts = [[b for b in t.encode()] for t in prompts_text]
+    print(f"== serving {len(prompts)} byte-level prompts through {engine.slots} slots")
+    outs = engine.generate(prompts, max_new_tokens=24)
+    for text, toks in zip(prompts_text, outs):
+        cont = bytes(t for t in toks if t < 256).decode(errors="replace")
+        print(f"   {text!r} -> {cont!r}")
+    print("OK (quantized weights + activations + int4 KV, batched decode)")
+
+
+if __name__ == "__main__":
+    main()

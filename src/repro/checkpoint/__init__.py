@@ -1,0 +1,5 @@
+"""Sharded atomic checkpointing (msgpack + zstd), no external deps."""
+
+from repro.checkpoint.checkpointer import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,22 @@
+"""Architecture configs: the 10 assigned archs + the paper's own eval model.
+
+Use ``repro.configs.base.get_config(arch_id)`` / ``get_smoke_config(arch_id)``.
+"""
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+]

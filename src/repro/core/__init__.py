@@ -1,0 +1,39 @@
+"""KLLM/OASIS core: K-Means dual-side quantization + LUT-GEMM + outlier compensation.
+
+Public API re-exports. See DESIGN.md §3 for the layer map.
+"""
+
+from repro.core.codebook import (
+    assign,
+    assign_via_boundaries,
+    boundaries_from_centroids,
+    kmeans_fit,
+    quantile_init,
+)
+from repro.core.lut_gemm import build_lut, lut_gemm, lut_gemm_counting
+from repro.core.outlier import (
+    OutlierSet,
+    compensate_gather,
+    compensate_scatter,
+    detect_outliers_static,
+    detect_outliers_topk,
+    num_outliers,
+    orizuru_comparisons,
+    outlier_residuals,
+    static_thresholds,
+)
+from repro.core.qlinear import QLinearConfig, QLinearParams, qlinear_apply, quantize_linear
+from repro.core.quantize import (
+    QuantizedActivation,
+    QuantizedWeight,
+    dequantize_activation,
+    dequantize_weight,
+    fit_activation_codebook,
+    pack_int4,
+    quantize_activation,
+    quantize_weight,
+    token_scale,
+    unpack_int4,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

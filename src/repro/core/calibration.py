@@ -1,0 +1,107 @@
+"""Offline calibration: activation capture, Fisher weights, codebook fitting.
+
+Paper §III-A / §V-A: activation centroids are trained offline on 16 C4
+calibration samples with *weighted* K-Means, weights from Fisher information
+of the activations. Weight codebooks come straight from the pretrained
+weights (no calibration data needed).
+
+Capture mechanism: quantizable layers call :func:`tap` on their input
+activations. Outside a capture context this is a zero-cost identity. Inside
+one (plain-Python forward, not jit), activations are recorded per layer name.
+
+Fisher mechanism: the empirical Fisher diagonal for an activation x is
+E[(dL/dx)^2]. We obtain dL/dx exactly by differentiating w.r.t. a zero
+perturbation injected at every tap point (``fisher_capture``) — no framework
+hooks needed, pure JAX.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+
+__all__ = ["tap", "capture", "captured", "fisher_capture", "calibrate_codebooks"]
+
+_CAPTURE: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_calibration_capture", default=None
+)
+_EPS: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_calibration_eps", default=None
+)
+
+
+def tap(name: str, x: jax.Array) -> jax.Array:
+    """Mark ``x`` as the input activation of quantizable layer ``name``.
+
+    Identity outside calibration. Inside :func:`capture`, records ``x``;
+    inside :func:`fisher_capture`'s traced forward, adds the named zero
+    perturbation so its cotangent IS dL/dx.
+    """
+    eps = _EPS.get()
+    if eps is not None and name in eps:
+        x = x + eps[name].astype(x.dtype)
+    store = _CAPTURE.get()
+    if store is not None:
+        store.setdefault(name, []).append(jax.device_get(x).reshape(-1, x.shape[-1]))
+    return x
+
+
+@contextlib.contextmanager
+def capture():
+    """Context manager: record all tapped activations. Yields the store dict."""
+    store: dict[str, list] = {}
+    token = _CAPTURE.set(store)
+    try:
+        yield store
+    finally:
+        _CAPTURE.reset(token)
+
+
+def captured(store: dict[str, list]) -> dict[str, jnp.ndarray]:
+    """Concatenate a capture store into (tokens, K) arrays per layer."""
+    return {k: jnp.concatenate([jnp.asarray(v) for v in vs], axis=0) for k, vs in store.items()}
+
+
+def fisher_capture(
+    loss_fn: Callable[[], jax.Array],
+    eps_shapes: dict[str, tuple[int, ...]],
+) -> dict[str, jax.Array]:
+    """Per-element Fisher proxy (dL/dx)^2 at every tap point.
+
+    ``loss_fn`` must execute the tapped forward (closing over params/batch);
+    ``eps_shapes`` gives the activation shape at each tap. Returns squared
+    gradients per layer name.
+    """
+
+    def with_eps(eps: dict[str, jax.Array]) -> jax.Array:
+        token = _EPS.set(eps)
+        try:
+            return loss_fn()
+        finally:
+            _EPS.reset(token)
+
+    zeros = {k: jnp.zeros(s, jnp.float32) for k, s in eps_shapes.items()}
+    grads = jax.grad(with_eps)(zeros)
+    return {k: jnp.square(g) for k, g in grads.items()}
+
+
+def calibrate_codebooks(
+    acts: dict[str, jax.Array],
+    a_bits: int = 4,
+    fisher: dict[str, jax.Array] | None = None,
+    scale_mode: qz.ScaleMode = "rms",
+) -> dict[str, jax.Array]:
+    """Fit one offline activation codebook per captured layer."""
+    out = {}
+    for name, x in acts.items():
+        f = None if fisher is None else fisher.get(name)
+        if f is not None:
+            f = f.reshape(-1, x.shape[-1])[: x.shape[0]]
+        out[name] = qz.fit_activation_codebook(x, nbits=a_bits, fisher=f, scale_mode=scale_mode)
+    return out

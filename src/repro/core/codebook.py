@@ -1,0 +1,120 @@
+"""K-Means codebook learning for KLLM/OASIS non-uniform quantization.
+
+The paper (§III-A) quantizes weights and activations with learned-codebook
+(K-Means) quantization [MacQueen'67]:
+
+    x~_i = C_{idx_i},  idx_i = argmin_k || x_i - C_k ||^2        (Eq. 1)
+
+Activation codebooks are fit with a *weighted* K-Means whose sample weights come
+from Fisher information (sensitivity) estimates, so that centroids spend
+resolution where the loss is most sensitive.
+
+Everything here is pure JAX (jit-able, differentiable where meaningful) and
+deterministic: initialization is quantile-based (no RNG), Lloyd iterations run a
+fixed ``iters`` count under ``lax.fori_loop`` so the fit itself can be jitted
+and reused inside calibration sweeps.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantile_init",
+    "kmeans_fit",
+    "assign",
+    "boundaries_from_centroids",
+    "assign_via_boundaries",
+]
+
+
+def quantile_init(x: jax.Array, n_centroids: int, w: jax.Array | None = None) -> jax.Array:
+    """Deterministic centroid init at evenly spaced (weighted) quantiles.
+
+    Using quantiles rather than uniform spacing matches the non-uniform
+    density of LLM weight/activation distributions and makes Lloyd converge
+    in a handful of iterations.
+    """
+    x = x.reshape(-1).astype(jnp.float32)
+    qs = (jnp.arange(n_centroids, dtype=jnp.float32) + 0.5) / n_centroids
+    if w is None:
+        return jnp.quantile(x, qs)
+    # Weighted quantiles: sort by value, walk the normalized cumulative weight.
+    order = jnp.argsort(x)
+    xs = x[order]
+    ws = w.reshape(-1).astype(jnp.float32)[order]
+    cw = jnp.cumsum(ws)
+    cw = cw / jnp.maximum(cw[-1], 1e-30)
+    pos = jnp.searchsorted(cw, qs)
+    return xs[jnp.clip(pos, 0, x.shape[0] - 1)]
+
+
+def assign(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment (Eq. 1). Returns int32 indices, shape of x.
+
+    Note: centroids need not be sorted here.  The production inference path
+    uses :func:`assign_via_boundaries` (the paper's Clustering-Unit binary
+    search), which requires sorted centroids and is exactly equivalent —
+    ``tests/test_codebook.py`` asserts the equivalence.
+    """
+    d = jnp.abs(x[..., None] - centroids)  # scalar data => L2 == |.|
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def boundaries_from_centroids(centroids: jax.Array) -> jax.Array:
+    """Decision boundaries b_i = (c_i + c_{i+1})/2 of the paper's Clustering Unit.
+
+    ``centroids`` must be sorted ascending; returns ``len(centroids) - 1``
+    boundaries.
+    """
+    return 0.5 * (centroids[:-1] + centroids[1:])
+
+
+def assign_via_boundaries(x: jax.Array, sorted_centroids: jax.Array) -> jax.Array:
+    """Cluster via binary search over boundary values (paper Fig. 9(b)).
+
+    For any x in [b_{i-1}, b_i) the index is i.  This is the TPU analogue of
+    the Clustering Unit's log2(2^n) hierarchical comparisons, expressed as
+    ``searchsorted`` (XLA lowers this to a vectorized binary search; the
+    Pallas kernel in ``kernels/bucketize.py`` unrolls the 4 compare levels
+    explicitly).
+    """
+    b = boundaries_from_centroids(sorted_centroids)
+    return jnp.searchsorted(b, x, side="right").astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_centroids", "iters"))
+def kmeans_fit(
+    x: jax.Array,
+    n_centroids: int,
+    w: jax.Array | None = None,
+    iters: int = 25,
+) -> jax.Array:
+    """Fit a 1-D K-Means codebook with optional per-sample (Fisher) weights.
+
+    Lloyd's algorithm with deterministic quantile init.  Empty clusters keep
+    their previous centroid (no random restarts — determinism matters for
+    reproducible checkpoints and multi-host consistency).
+
+    Returns sorted centroids, shape ``(n_centroids,)``, float32.
+    """
+    xf = x.reshape(-1).astype(jnp.float32)
+    wf = (
+        jnp.ones_like(xf)
+        if w is None
+        else jnp.maximum(w.reshape(-1).astype(jnp.float32), 1e-12)
+    )
+    init = quantile_init(xf, n_centroids, None if w is None else wf)
+
+    def step(_, c):
+        idx = assign(xf, c)
+        one_hot = jax.nn.one_hot(idx, n_centroids, dtype=jnp.float32)  # (S, C)
+        wsum = one_hot.T @ wf  # (C,)
+        wx = one_hot.T @ (wf * xf)  # (C,)
+        new = jnp.where(wsum > 0, wx / jnp.maximum(wsum, 1e-30), c)
+        return jnp.sort(new)
+
+    return jax.lax.fori_loop(0, iters, step, jnp.sort(init))

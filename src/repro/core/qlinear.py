@@ -1,0 +1,171 @@
+"""QLinear: the paper's full dual-branch quantized linear layer.
+
+    y = LUT-GEMM(quantize(x), Wq)            # main branch (look-ahead)
+      + r_outlier @ W~[outlier_channels, :]  # outlier branch (compensation)
+      + bias
+
+This is the composable unit the model zoo uses for quantized inference. The
+main branch can run through the jnp factorized form or the Pallas kernel
+(``repro.kernels.ops.lut_gemm``); both are exact vs the counting-form oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.outlier as ol
+import repro.core.quantize as qz
+from repro.core.lut_gemm import lut_gemm as _lut_gemm_jnp
+
+__all__ = [
+    "QLinearConfig",
+    "QLinearParams",
+    "quantize_linear",
+    "qlinear_apply",
+    "current_apply_config",
+    "use_apply_config",
+]
+
+Detection = Literal["dynamic", "static", "static_dense", "none"]
+CompMode = Literal["auto", "gather", "scatter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinearConfig:
+    """Static configuration of a quantized linear layer (hashable, jit-static)."""
+
+    w_bits: int = 4
+    a_bits: int = 4
+    method: str = "kmeans"  # kmeans (paper) | uniform (RTN/INT-WAQ baseline)
+    outlier_frac: float = 0.005  # per side; paper default 0.5% + 0.5%
+    detection: Detection = "dynamic"  # OASIS='dynamic', OASIS-S='static'
+    comp_mode: CompMode = "auto"
+    scale_mode: qz.ScaleMode = "rms"
+    compute_dtype: object = jnp.float32
+    use_kernel: bool = False  # route main branch through the Pallas kernel
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["qw", "act_codebook", "bias", "thr_lo", "thr_hi"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class QLinearParams:
+    qw: qz.QuantizedWeight
+    act_codebook: jax.Array  # fp32 (2^a_bits,) offline-learned
+    bias: jax.Array | None
+    thr_lo: jax.Array | None  # OASIS-S static thresholds (scalars)
+    thr_hi: jax.Array | None
+
+
+def quantize_linear(
+    w: jax.Array,
+    calib_acts: jax.Array,
+    cfg: QLinearConfig,
+    bias: jax.Array | None = None,
+    fisher: jax.Array | None = None,
+) -> QLinearParams:
+    """PTQ a linear layer: weight K-Means + offline activation codebook.
+
+    ``w``: (K, N). ``calib_acts``: (tokens, K) calibration activations for
+    this layer (paper: 16 C4 samples). ``fisher``: optional per-element
+    Fisher-information weights for weighted K-Means.
+    """
+    qw = qz.quantize_weight(w, nbits=cfg.w_bits, method=cfg.method)
+    book = qz.fit_activation_codebook(
+        calib_acts, nbits=cfg.a_bits, fisher=fisher, scale_mode=cfg.scale_mode,
+        method=cfg.method,
+    )
+    thr_lo = thr_hi = None
+    if cfg.detection in ("static", "static_dense"):
+        thr_lo, thr_hi = ol.static_thresholds(calib_acts, cfg.outlier_frac)
+    return QLinearParams(qw=qw, act_codebook=book, bias=bias, thr_lo=thr_lo, thr_hi=thr_hi)
+
+
+def _tokens(x: jax.Array) -> int:
+    return math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+
+
+# Ambient apply-config: model code calls plain ``dense_apply`` on a tree that
+# may hold QLinearParams; the serving engine selects the quantization behaviour
+# (kernel on/off, detection mode, outlier budget) without threading a config
+# through every layer. Static under jit (baked at trace time).
+import contextlib
+import contextvars
+
+_APPLY_CFG: contextvars.ContextVar[QLinearConfig] = contextvars.ContextVar(
+    "repro_qlinear_apply_cfg", default=QLinearConfig()
+)
+
+
+def current_apply_config() -> QLinearConfig:
+    return _APPLY_CFG.get()
+
+
+@contextlib.contextmanager
+def use_apply_config(cfg: QLinearConfig):
+    token = _APPLY_CFG.set(cfg)
+    try:
+        yield
+    finally:
+        _APPLY_CFG.reset(token)
+
+
+def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig) -> jax.Array:
+    """Dual-branch forward (paper Fig. 7). Output dtype follows ``x``."""
+    out_dtype = x.dtype
+    qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
+
+    # ---- main branch: look-ahead LUT-GEMM over ALL activations ------------
+    if cfg.use_kernel:
+        from repro.kernels import ops as kops
+
+        y = kops.lut_gemm(qa, p.qw, out_dtype=cfg.compute_dtype)
+    else:
+        y = _lut_gemm_jnp(qa, p.qw, out_dtype=cfg.compute_dtype,
+                          compute_dtype=cfg.compute_dtype)
+
+    # ---- outlier branch: detect, residual, compensate ----------------------
+    if cfg.detection == "static_dense" and cfg.outlier_frac > 0:
+        # OASIS-S with dense masked compensation: zero sorts, one extra dense
+        # matmul. Orizuru/lax.top_k at 32k-token prefill means a full sort per
+        # projection (~12 GB/device of sort+gather workspace x concurrency —
+        # EXPERIMENTS §Perf P1); thresholds are offline (paper's OASIS-S) and
+        # the mask/residual chain fuses to nothing. Decode keeps the dynamic
+        # Orizuru path (sorting 1 token is free; accuracy is higher).
+        deq = qz.dequantize_activation(qa, dtype=cfg.compute_dtype)
+        xf = x.astype(cfg.compute_dtype)
+        mask = (xf > p.thr_hi) | (xf < p.thr_lo)
+        r = jnp.where(mask, xf - deq, 0)
+        w = (p.qw.codebook[p.qw.indices] * p.qw.scale[None, :]).astype(cfg.compute_dtype)
+        y = y + jnp.einsum("...k,kn->...n", r, w)
+    elif cfg.detection != "none" and cfg.outlier_frac > 0:
+        k = ol.num_outliers(x.shape[-1], cfg.outlier_frac)
+        if cfg.detection == "dynamic":
+            outs = ol.detect_outliers_topk(x.astype(jnp.float32), k)
+        else:
+            outs = ol.detect_outliers_static(
+                x.astype(jnp.float32), p.thr_lo, p.thr_hi, k
+            )
+        r = ol.outlier_residuals(outs, qa)
+        mode = cfg.comp_mode
+        if mode == "auto":
+            # decode-ish (few tokens): row-gather; prefill-ish: scatter+dense GEMM
+            mode = "gather" if _tokens(x) <= 64 else "scatter"
+        comp = (
+            ol.compensate_gather(r, outs, p.qw, cfg.compute_dtype)
+            if mode == "gather"
+            else ol.compensate_scatter(r, outs, p.qw, cfg.compute_dtype)
+        )
+        y = y + comp
+
+    if p.bias is not None:
+        y = y + p.bias.astype(cfg.compute_dtype)
+    return y.astype(out_dtype)

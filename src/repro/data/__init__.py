@@ -1,0 +1,5 @@
+"""Deterministic, resumable, host-sharded data pipeline."""
+
+from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline, synthetic_corpus
+
+__all__ = ["ByteCorpus", "DataConfig", "TokenPipeline", "synthetic_corpus"]

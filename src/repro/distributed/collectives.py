@@ -1,0 +1,109 @@
+"""Distributed-optimization collectives: int8 gradient compression with
+error feedback.
+
+For DP all-reduces at 1000+-node scale the gradient exchange is
+interconnect-bound; blockwise int8 quantization cuts the bytes 4x (fp32
+moments unaffected). Error feedback (residual carried to the next step) keeps
+the compression unbiased over time — standard 1-bit-Adam/PowerSGD-family
+practice.
+
+Two entry points:
+  * compress_decompress_tree — drop-in inside a pjit train step: quantize +
+    dequantize the gradient BEFORE the (implicit, GSPMD-inserted) all-reduce.
+    The wire format stays fp32 under pure GSPMD, but the information content
+    is int8, which keeps the *semantics* testable everywhere; on clusters the
+    same quantizer runs under shard_map (below) for true int8 wires.
+  * compressed_psum — explicit shard_map collective: int8 payload, int32
+    accumulation (no overflow up to 2^23 summands), per-block fp scales.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_error_state",
+    "quantize_blockwise",
+    "dequantize_blockwise",
+    "compress_decompress_tree",
+    "compressed_psum",
+]
+
+_BLOCK = 256
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _pad_to_block(x: jax.Array):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % _BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def quantize_blockwise(x: jax.Array):
+    """fp -> (int8 values, fp32 per-block scales). Blocks of 256 elements."""
+    flat, _ = _pad_to_block(x)
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_decompress_tree(grads, err_state):
+    """Per-leaf: q = Q(g + err); g' = deQ(q); err' = (g + err) - g'.
+
+    Returns (compressed-then-restored grads, new error state). The round-trip
+    loses <= 1/254 of each block's absmax per step; error feedback re-injects
+    the loss next step (unbiased in expectation) — asserted in tests.
+    """
+
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        q, s = quantize_blockwise(tot)
+        deq = dequantize_blockwise(q, s, g.shape)
+        return deq.astype(g.dtype), tot - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+        jax.tree.unflatten(treedef, [p[1] for p in pairs]),
+    )
+
+
+def compressed_psum(x: jax.Array, axis_name: str):
+    """int8-wire psum for use inside shard_map.
+
+    Protocol (the order matters for exactness):
+      1. agree on a SHARED per-block scale: pmax of local absmax (tiny fp32
+         exchange, 1/256 of the payload)
+      2. quantize locally against the shared scale
+      3. psum the int8 payload with int32 accumulation (overflow-safe for
+         < 2^23 ranks)
+      4. dequantize once with the shared scale.
+    Sum(Q_shared(x_i)) reconstructs exactly Q_shared(sum) up to per-element
+    rounding <= n_ranks * scale/2 — absorbed by upstream error feedback.
+    """
+    flat, _ = _pad_to_block(x)
+    blocks = flat.reshape(-1, _BLOCK)
+    local_amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(jax.lax.pmax(local_amax, axis_name), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    out = (total.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in x.shape:
+        n *= d
+    return out[:n].reshape(x.shape).astype(x.dtype)

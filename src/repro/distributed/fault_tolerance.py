@@ -1,0 +1,137 @@
+"""Fault-tolerance machinery for 1000+-node posture.
+
+Components (each unit-testable on one host):
+
+* :class:`StepMonitor` — running step-time stats + straggler detection
+  (step > factor x running median). On a real cluster the detection feeds
+  either collective-timeout tuning or the elastic path below.
+* :func:`elastic_plan` — given surviving pod/host counts, produce the largest
+  valid (pod, data, model) mesh that preserves TP degree (re-sharding TP
+  requires weight reshuffling; dropping DP replicas does not), plus the batch
+  re-split. The driver recompiles on the planned mesh and restores the latest
+  checkpoint — params are saved unsharded-logical so any mesh can load them.
+* :class:`Heartbeat` — liveness file per host; stale heartbeat == dead host
+  (the launcher-side detector on clusters without a control plane).
+* :func:`find_resumable_step` — newest COMMIT-marked checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import statistics
+import time
+
+__all__ = ["StepMonitor", "Heartbeat", "elastic_plan", "find_resumable_step"]
+
+
+class StepMonitor:
+    """Streaming step-time stats; flags stragglers vs the running median."""
+
+    def __init__(self, window: int = 64, straggler_factor: float = 2.0):
+        self.window = window
+        self.factor = straggler_factor
+        self.times: list[float] = []
+        self.straggler_count = 0
+
+    def record(self, dt: float) -> None:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if self.is_straggler(dt):
+            self.straggler_count += 1
+
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+    def is_straggler(self, dt: float) -> bool:
+        return len(self.times) >= 8 and dt > self.factor * self.median()
+
+    def summary(self) -> dict:
+        if not self.times:
+            return {}
+        return {
+            "median_s": self.median(),
+            "p95_s": sorted(self.times)[int(0.95 * (len(self.times) - 1))],
+            "stragglers": self.straggler_count,
+        }
+
+
+class Heartbeat:
+    """Per-host liveness file; launcher declares a host dead when stale."""
+
+    def __init__(self, directory: str, host_id: int, stale_after_s: float = 60.0):
+        self.path = pathlib.Path(directory) / f"heartbeat_{host_id}.json"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.stale_after = stale_after_s
+        self.host_id = host_id
+
+    def beat(self, step: int = -1) -> None:
+        self.path.write_text(json.dumps({"t": time.time(), "step": step, "host": self.host_id}))
+
+    @staticmethod
+    def live_hosts(directory: str, stale_after_s: float = 60.0) -> list[int]:
+        now = time.time()
+        out = []
+        for f in pathlib.Path(directory).glob("heartbeat_*.json"):
+            try:
+                d = json.loads(f.read_text())
+            except (json.JSONDecodeError, OSError):
+                continue
+            if now - d["t"] < stale_after_s:
+                out.append(int(d["host"]))
+        return sorted(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    global_batch: int
+    note: str
+
+
+def elastic_plan(
+    surviving_chips: int,
+    model_parallel: int,
+    old_global_batch: int,
+    old_chips: int,
+    chips_per_pod: int = 256,
+) -> ElasticPlan:
+    """Largest valid mesh after failures, preserving the TP degree.
+
+    Policy: TP degree is sacred (changing it reshards weights); we shrink the
+    DP extent to the largest multiple that fits, and scale global batch
+    proportionally (keeping per-replica batch constant — the loss-scale-stable
+    choice; the LR schedule is stepped on tokens, not steps, so training
+    dynamics survive).
+    """
+    if surviving_chips < model_parallel:
+        raise ValueError("fewer chips than one TP group — cannot continue")
+    dp = surviving_chips // model_parallel
+    chips = dp * model_parallel
+    pods = max(1, chips // chips_per_pod)
+    new_batch = max(1, old_global_batch * chips // old_chips)
+    if pods > 1 and chips % chips_per_pod == 0:
+        shape = (pods, chips_per_pod // model_parallel, model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (dp, model_parallel)
+        axes = ("data", "model")
+    return ElasticPlan(
+        mesh_shape=shape,
+        mesh_axes=axes,
+        global_batch=new_batch,
+        note=f"dropped {old_chips - chips} chips; DP {old_chips // model_parallel} -> {dp}",
+    )
+
+
+def find_resumable_step(ckpt_dir: str) -> int | None:
+    """Newest COMMIT-marked checkpoint step (None if none exist)."""
+    best = None
+    for d in pathlib.Path(ckpt_dir).glob("step_*"):
+        if (d / "COMMIT").exists():
+            s = int(d.name.split("_")[1])
+            best = s if best is None else max(best, s)
+    return best

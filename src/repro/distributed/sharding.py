@@ -1,0 +1,98 @@
+"""Logical-axis sharding rules (t5x/MaxText-style) for the model zoo.
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"d_model", "heads", "d_ff", "vocab", "experts", ...). A rule set maps logical
+axes -> mesh axes; `constrain` applies with_sharding_constraint only when a
+rule set is active (CPU unit tests run with no rules and zero overhead).
+
+Rule sets are data, so the dry-run can sweep sharding strategies (this is the
+knob §Perf hillclimbs — e.g. moving "seq" between None and "model" toggles
+sequence parallelism without touching model code).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "MULTI_POD_RULES",
+    "active_rules",
+    "constrain",
+    "replicate",
+    "spec_for",
+    "use_rules",
+]
+
+# Single-pod mesh ("data", "model"). Megatron-style TP over "model", DP over
+# "data". "seq" unsharded by default; SP rules override per-shape.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": "data",
+    "seq": None,
+    "seq_sp": None,  # residual-stream seq dim; "model" enables Megatron SP
+    "d_model": None,
+    "heads_flat": "model",  # flattened H*head_dim projection outputs
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "dispatch_groups": "data",
+    "d_inner": "model",  # SSM/LRU inner channels
+    "state": None,
+}
+
+# Multi-pod mesh ("pod", "data", "model"): DP spans pod x data.
+MULTI_POD_RULES: dict[str, object] = {**DEFAULT_RULES, "batch": ("pod", "data")}
+
+_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+
+
+def active_rules() -> dict | None:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict | None):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def spec_for(*logical_axes: str | None, rules: dict | None = None) -> P:
+    """PartitionSpec for a tensor whose dims carry these logical names."""
+    r = rules if rules is not None else (_RULES.get() or {})
+    return P(*[r.get(a) if a is not None else None for a in logical_axes])
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """FORCE full replication (explicit all-gather of a sharded operand).
+
+    Unlike :func:`constrain` (which skips all-None specs to leave propagation
+    free), this is deliberate: used where gathering a small operand is cheaper
+    than reducing a large partial result (e.g. MoE down-projection, §Perf G2).
+    """
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*([None] * x.ndim)))
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint iff a rule set is active AND at least one axis
+    resolves to a mesh axis. An all-None spec would FORCE replication — when
+    we have no opinion we must leave GSPMD propagation free instead."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = spec_for(*logical_axes, rules=rules)
+    if all(a is None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the perf-critical compute of KLLM/OASIS.
+
+- lut_gemm:      W4A4 K-Means index GEMM (dequant-in-VMEM -> MXU)
+- bucketize:     activation clustering (Clustering Unit)
+- topk_outlier:  Orizuru dual top-k/bottom-k detection
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+Kernels are validated in interpret mode on CPU and lower unchanged on TPU.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.bucketize import bucketize_kernel_call
+from repro.kernels.lut_gemm import lut_gemm_kernel_call
+from repro.kernels.topk_outlier import topk_outlier_kernel_call
+
+__all__ = [
+    "ops",
+    "ref",
+    "bucketize_kernel_call",
+    "lut_gemm_kernel_call",
+    "topk_outlier_kernel_call",
+]

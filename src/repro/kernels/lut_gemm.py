@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: W4A4 K-Means index GEMM (the paper's LUT-GEMM on MXU).
+
+TPU-native formulation of the Cartesian-product LUT GEMM (DESIGN.md §2):
+weight indices stay int4-packed in HBM; per 128-aligned VMEM tile we
+
+  1. unpack two 4-bit indices per byte (integer bit ops on the VPU),
+  2. "gather" centroids from the 16-entry codebook via compare-select
+     (a 16-way select IS the LUT lookup — the codebook lives in registers,
+     the TPU analogue of the ASIC's on-chip LUT),
+  3. feed the MXU with the dequantized tile; accumulate f32 partials across
+     the K grid dimension in the output block.
+
+No dequantized weight matrix ever exists in HBM — HBM traffic is
+K·N/2 bytes of indices + 64 B of codebook, i.e. the paper's
+"no-dequantization" property on the side that bounds TPU decode throughput.
+
+Scales (per-token, per-out-channel) are rank-1 and applied by the wrapper in
+``ops.py`` — keeping the kernel a pure index-GEMM keeps the LUT math testable
+in isolation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lut_gemm_kernel_call"]
+
+
+def _deq_select(idx: jax.Array, book: jax.Array, n_entries: int) -> jax.Array:
+    """Centroid lookup as a compare-select chain (VPU-friendly 16-way LUT).
+
+    out[...] = book[idx[...]] without a hardware gather: for the 2^4-entry
+    codebooks of W4A4 this is 15 vselects — cheap relative to the MXU dot it
+    feeds, and it vectorizes perfectly on 8x128 vregs.
+    """
+    out = jnp.full(idx.shape, book[0], jnp.float32)
+    for i in range(1, n_entries):
+        out = jnp.where(idx == i, book[i], out)
+    return out
+
+
+def _kernel(a_idx_ref, w_packed_ref, a_book_ref, w_book_ref, o_ref, *, n_a: int, n_w: int):
+    """Grid: (M/bm, N/bn, K/bk); K is the innermost (arbitrary) dimension."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_book = a_book_ref[...]
+    w_book = w_book_ref[...]
+
+    a = _deq_select(a_idx_ref[...], a_book, 2**n_a)  # (bm, bk) f32
+
+    packed = w_packed_ref[...]  # (bk, bn//2) uint8
+    lo = _deq_select((packed & 0xF).astype(jnp.int32), w_book, 2**n_w)
+    hi = _deq_select((packed >> 4).astype(jnp.int32), w_book, 2**n_w)
+    # Interleave even/odd output channels on the minor axis: (bk, bn//2, 2) ->
+    # (bk, bn). A minor-dim relayout on TPU; deinterleaved packing is the
+    # documented alternative if this ever dominates (see EXPERIMENTS §Perf).
+    w = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+
+    o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+def lut_gemm_kernel_call(
+    a_idx: jax.Array,  # (M, K) int32
+    w_packed: jax.Array,  # (K, N//2) uint8
+    a_book: jax.Array,  # (2^nA,) f32
+    w_book: jax.Array,  # (2^nW,) f32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled pallas_call. M/N are padded here; K must divide block_k-clamped.
+
+    VMEM working set per step (defaults, W4A4):
+      a_idx 128x512 int32 = 256 KiB, w 512x64 uint8 = 32 KiB,
+      deq tiles (128x512 + 512x128) f32 = 512 KiB, acc 128x128 f32 = 64 KiB
+    -> < 1 MiB, comfortably inside the ~16 MiB/core VMEM with double-buffering.
+    """
+    m, k = a_idx.shape
+    n = w_packed.shape[1] * 2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if k % bk:
+        raise ValueError(f"K={k} must be divisible by block_k={bk}")
+    if bn % 2:
+        raise ValueError("block_n must be even (nibble packing)")
+
+    # pad M and N up to block multiples (garbage rows/cols sliced off below)
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm:
+        a_idx = jnp.pad(a_idx, ((0, pm), (0, 0)))
+    if pn:
+        w_packed = jnp.pad(w_packed, ((0, 0), (0, pn // 2)))
+    gm, gn, gk = (m + pm) // bm, (n + pn) // bn, k // bk
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            n_a=int(a_book.shape[0]).bit_length() - 1,
+            n_w=int(w_book.shape[0]).bit_length() - 1,
+        ),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(a_book.shape, lambda i, j, kk: (0,)),
+            pl.BlockSpec(w_book.shape, lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=interpret,
+    )(a_idx, w_packed, a_book, w_book)
+    return out[:m, :n]

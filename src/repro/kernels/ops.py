@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These adapt the kernels to the core library's types (QuantizedActivation /
+QuantizedWeight / OutlierSet), handle arbitrary leading batch dims, apply the
+rank-1 scales, and auto-select interpret mode off-TPU (the container is
+CPU-only; on a real TPU ``interpret=False`` compiles the same kernels).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codebook import boundaries_from_centroids
+from repro.core.outlier import OutlierSet
+from repro.core.quantize import QuantizedActivation, QuantizedWeight
+from repro.kernels.bucketize import bucketize_kernel_call
+from repro.kernels.lut_gemm import lut_gemm_kernel_call
+from repro.kernels.topk_outlier import topk_outlier_kernel_call
+
+__all__ = ["lut_gemm", "bucketize", "topk_outlier", "should_interpret"]
+
+
+def should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _flatten_leading(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+@partial(jax.jit, static_argnames=("out_dtype",))
+def lut_gemm(qa: QuantizedActivation, qw: QuantizedWeight, out_dtype=jnp.float32) -> jax.Array:
+    """Kernel-backed factorized LUT-GEMM with scales. Matches core.lut_gemm."""
+    idx2d, lead = _flatten_leading(qa.idx)
+    y = lut_gemm_kernel_call(
+        idx2d.astype(jnp.int32),
+        qw.packed,
+        qa.codebook.astype(jnp.float32),
+        qw.codebook.astype(jnp.float32),
+        interpret=should_interpret(),
+    )
+    y = y.reshape(*lead, qw.shape[1])
+    return (y * qa.scale * qw.scale).astype(out_dtype)
+
+
+@jax.jit
+def bucketize(x: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Nearest-centroid indices via the Clustering-Unit kernel."""
+    x2d, lead = _flatten_leading(x)
+    idx = bucketize_kernel_call(
+        x2d, boundaries_from_centroids(codebook), interpret=should_interpret()
+    )
+    return idx.reshape(*lead, x.shape[-1])
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_outlier(x: jax.Array, k: int) -> OutlierSet:
+    """Orizuru kernel -> OutlierSet (top-k then bottom-k, mask all-ones)."""
+    x2d, lead = _flatten_leading(x)
+    hi_v, hi_i, lo_v, lo_i = topk_outlier_kernel_call(
+        x2d, k, interpret=should_interpret()
+    )
+    values = jnp.concatenate([hi_v, lo_v], axis=-1).reshape(*lead, 2 * k)
+    channels = jnp.concatenate([hi_i, lo_i], axis=-1).reshape(*lead, 2 * k)
+    return OutlierSet(values=values, channels=channels, mask=jnp.ones_like(values))

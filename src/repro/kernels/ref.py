@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` matches its kernel's contract exactly (same argument layout,
+same dtypes); kernel tests sweep shapes/dtypes and assert allclose against
+these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lut_gemm_ref", "bucketize_ref", "topk_outlier_ref"]
+
+
+def lut_gemm_ref(
+    a_idx: jax.Array,  # (M, K) int32 activation codebook indices
+    w_packed: jax.Array,  # (K, N//2) uint8, two 4-bit weight indices per byte
+    a_book: jax.Array,  # (2^nA,) f32
+    w_book: jax.Array,  # (2^nW,) f32
+) -> jax.Array:
+    """Unscaled index-GEMM: Y[m,n] = sum_k aBook[aIdx[m,k]] * wBook[wIdx[k,n]]."""
+    lo = (w_packed & 0xF).astype(jnp.int32)
+    hi = (w_packed >> 4).astype(jnp.int32)
+    w_idx = jnp.stack([lo, hi], axis=-1).reshape(w_packed.shape[0], -1)
+    a = a_book[a_idx].astype(jnp.float32)
+    w = w_book[w_idx].astype(jnp.float32)
+    return a @ w
+
+
+def bucketize_ref(x: jax.Array, boundaries: jax.Array) -> jax.Array:
+    """Cluster assignment via boundaries (paper Clustering Unit): int32."""
+    return jnp.searchsorted(boundaries, x, side="right").astype(jnp.int32)
+
+
+def topk_outlier_ref(x: jax.Array, k: int):
+    """Sort-based oracle for Orizuru: (hi_vals, hi_idx, lo_vals, lo_idx).
+
+    hi: k largest per row, descending; lo: k smallest per row, ascending.
+    Tie-break on index (smaller index wins), matching the kernel's
+    deterministic left-child rule.
+    """
+    hi_v, hi_i = jax.lax.top_k(x, k)
+    lo_v, lo_i = jax.lax.top_k(-x, k)
+    return hi_v, hi_i.astype(jnp.int32), -lo_v, lo_i.astype(jnp.int32)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: Orizuru — dual top-k/bottom-k outlier detection (§IV-D).
+
+The ASIC Orizuru is a two-fold tournament tree (max tree + min tree) with
+SHARED LEAF COMPARISONS: the N/2 pairwise compares that initialize the max
+tree's first level are reused (reversed) for the min tree, giving
+1.5N + 2k·log2(N) comparisons instead of ~3N (or 6N for SpAtten's engine).
+
+TPU adaptation (DESIGN.md §2): the serial pop-one-per-cycle loop is an ASIC
+latency trick with no TPU analogue — a vectorized argmax over a vreg-resident
+array has O(log N) depth anyway. What we keep is the *shared-pairwise* trick
+and the *pair-collapse* structure:
+
+  phase 1 (shared): A = max(x_even, x_odd), B = min(x_even, x_odd)
+                    — N/2 compares produce level-1 of BOTH trees;
+  phase 2 (pop):    k iterations of argmax over the N/2-wide A-array; a popped
+                    pair falls back to its other leaf (B) and then to -inf —
+                    exactly the paper's tree-maintenance semantics, k·(N/2)
+                    vector-lanes of work but only k sequential steps;
+  min side:         the SAME pop routine on (-B, -A) — comparisons reused.
+
+Tie-breaking matches the paper: the left child wins in both trees, which
+reproduces lax.top_k's ascending-index order on equal values (asserted in
+tests against the sort-based oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["topk_outlier_kernel_call"]
+
+_NEG_INF = float("-inf")  # plain literal: jnp constants would be captured consts in the kernel
+
+
+def _pop_topk(cur, fallback, idx_cur, idx_fb, k: int):
+    """k pops from a pair-collapsed array with single-fallback maintenance.
+
+    cur      : (bm, P) current per-pair front value (pair maxima)
+    fallback : (bm, P) the other leaf of each pair
+    idx_cur/idx_fb : original column indices of cur/fallback entries
+    Returns (vals (bm, k) descending, idx (bm, k)).
+    """
+    bm, p = cur.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, p), 1)
+    col_k = jax.lax.broadcasted_iota(jnp.int32, (bm, k), 1)
+    cnt = jnp.zeros((bm, p), jnp.int32)
+    vals = jnp.full((bm, k), _NEG_INF)
+    idxs = jnp.zeros((bm, k), jnp.int32)
+
+    def body(t, carry):
+        cur, cnt, vals, idxs = carry
+        v = jnp.max(cur, axis=1)  # (bm,)
+        # first-True argmax == lowest pair index on ties (left-child rule)
+        is_max = cur == v[:, None]
+        j = jnp.argmax(is_max, axis=1).astype(jnp.int32)  # (bm,)
+        onehot = lane == j[:, None]
+        cnt_j = jnp.sum(jnp.where(onehot, cnt, 0), axis=1)  # (bm,)
+        first_pop = cnt_j == 0
+        take = lambda a: jnp.sum(jnp.where(onehot, a, 0), axis=1)
+        takef = lambda a: jnp.sum(jnp.where(onehot, a, 0.0), axis=1)
+        orig = jnp.where(first_pop, take(idx_cur), take(idx_fb))
+        repl = jnp.where(first_pop, takef(fallback), _NEG_INF)
+        cur = jnp.where(onehot, repl[:, None], cur)
+        cnt = cnt + onehot.astype(jnp.int32)
+        write = col_k == t
+        vals = jnp.where(write, v[:, None], vals)
+        idxs = jnp.where(write, orig[:, None], idxs)
+        return cur, cnt, vals, idxs
+
+    _, _, vals, idxs = jax.lax.fori_loop(0, k, body, (cur, cnt, vals, idxs))
+    return vals, idxs
+
+
+def _kernel(x_ref, hi_v_ref, hi_i_ref, lo_v_ref, lo_i_ref, *, k: int):
+    x = x_ref[...]  # (bm, N)
+    bm, n = x.shape
+    xp = x.reshape(bm, n // 2, 2)
+    xe, xo = xp[..., 0], xp[..., 1]
+
+    # --- shared pairwise comparisons (level-1 of both trees): N/2 compares ---
+    right_wins_max = xo > xe  # strict: ties go left (paper's rule)
+    right_wins_min = xo < xe
+    a = jnp.where(right_wins_max, xo, xe)  # pair maxima
+    b = jnp.where(right_wins_max, xe, xo)  # pair minima
+    pair = jax.lax.broadcasted_iota(jnp.int32, (bm, n // 2), 1) * 2
+    # Each tree keeps its own leaf mask (paper: m^(p) vs m^(q)), so primary and
+    # fallback indices are complements PER TREE — on a tie both trees pick the
+    # left child first and fall back to the right one.
+    a_idx = jnp.where(right_wins_max, pair + 1, pair)
+    a_fb_idx = jnp.where(right_wins_max, pair, pair + 1)
+    b_idx = jnp.where(right_wins_min, pair + 1, pair)
+    b_fb_idx = jnp.where(right_wins_min, pair, pair + 1)
+
+    hi_v, hi_i = _pop_topk(a, b, a_idx, a_fb_idx, k)
+    neg_v, lo_i = _pop_topk(-b, -a, b_idx, b_fb_idx, k)
+
+    hi_v_ref[...] = hi_v
+    hi_i_ref[...] = hi_i
+    lo_v_ref[...] = -neg_v
+    lo_i_ref[...] = lo_i
+
+
+def topk_outlier_kernel_call(
+    x: jax.Array,  # (M, N) f32, N even
+    k: int,
+    *,
+    block_m: int = 8,
+    interpret: bool = True,
+):
+    """Returns (hi_vals desc, hi_idx, lo_vals asc, lo_idx), each (M, k)."""
+    m, n = x.shape
+    if n % 2:
+        raise ValueError("N must be even (pairwise shared comparisons)")
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} must be in [1, N={n}]")
+    bm = min(block_m, m)
+    pm = (-m) % bm
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+    gm = (m + pm) // bm
+    shp = jax.ShapeDtypeStruct((m + pm, k), jnp.float32)
+    shpi = jax.ShapeDtypeStruct((m + pm, k), jnp.int32)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(gm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))] * 4,
+        out_shape=[shp, shpi, shp, shpi],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return tuple(o[:m] for o in outs)

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+Lowers + compiles every (architecture x input-shape x mesh) cell against the
+production mesh — (16, 16) single pod and (2, 16, 16) two pods — records
+memory_analysis / cost_analysis / multiplicity-weighted collective bytes, and
+writes one JSON per cell under results/dryrun/.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and the dry-run (and only the dry-run) needs
+512 host-platform placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.distributed.param_sharding import spec_tree_to_shardings
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW, analyze_hlo, roofline_terms
+from repro.launch.specs import build_cell, skip_reason
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             kv_quant: bool = False, overrides: dict | None = None,
+             tag: str = "", save_hlo: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    name = f"{arch}__{shape}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{name}.json"
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, SHAPES[shape])
+    if reason:
+        rec = {"cell": name, "status": "skipped", "reason": reason}
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    try:
+        setup = build_cell(arch, shape, multi_pod, kv_quant=kv_quant, overrides=overrides)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        donate = (0,) if setup.meta["kind"] == "train" else (1,)  # state / caches
+        with mesh:
+            with use_rules(setup.rules):
+                in_shardings = tuple(
+                    spec_tree_to_shardings(s, mesh) for s in setup.in_specs
+                )
+                jitted = jax.jit(
+                    setup.step_fn, in_shardings=in_shardings, donate_argnums=donate
+                )
+                lowered = jitted.lower(*setup.args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+                mem = compiled.memory_analysis()
+                cost = compiled.cost_analysis()
+                hlo = compiled.as_text()
+        analysis = analyze_hlo(hlo)
+        rr = roofline_terms(analysis, mem)
+        hbm_used = (
+            mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes
+        )
+        rec = {
+            "cell": name,
+            "status": "ok",
+            "arch": arch,
+            "shape": shape,
+            "mesh": [2, 16, 16] if multi_pod else [16, 16],
+            "kind": setup.meta["kind"],
+            "meta": setup.meta,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_hbm_bytes": hbm_used,
+                "fits_16GB": bool(hbm_used < HW().hbm_bytes),
+            },
+            "cost_analysis": {
+                "flops_unweighted": cost.get("flops", -1.0),
+                "bytes_accessed_unweighted": cost.get("bytes accessed", -1.0),
+            },
+            "hlo_analysis": {
+                "dot_flops_weighted": analysis["dot_flops"],
+                "collective_bytes_weighted": analysis["collective_bytes"],
+                "collective_breakdown": analysis["collective_breakdown"],
+                "while_trip_counts": analysis["while_trip_counts"],
+            },
+            "roofline": rr.as_dict(),
+        }
+        if save_hlo:
+            import gzip
+
+            (out_dir / f"{name}.hlo.txt.gz").write_bytes(gzip.compress(hlo.encode()))
+        print(
+            f"[dryrun] {name}: OK compile={t_compile:.0f}s "
+            f"hbm/dev={hbm_used/1e9:.2f}GB fits={rec['memory_analysis']['fits_16GB']} "
+            f"bottleneck={rr.bottleneck} "
+            f"(c={rr.compute_s*1e3:.2f}ms m={rr.memory_s*1e3:.2f}ms x={rr.collective_s*1e3:.2f}ms)",
+            flush=True,
+        )
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+        rec = {
+            "cell": name,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(f"[dryrun] {name}: FAILED {type(e).__name__}: {str(e)[:200]}", flush=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs(), action="append")
+    ap.add_argument("--shape", choices=list(SHAPES), action="append")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true", help="all assigned (arch x shape) cells")
+    ap.add_argument("--kv-quant", action="store_true", help="int4 K-Means KV cache variant")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-done", action="store_true", help="skip cells with existing OK results")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = args.arch or (list_archs(assigned_only=True) if args.all else [])
+    shapes = args.shape or list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if not archs:
+        ap.error("pass --arch or --all")
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                f = out_dir / (name + (f"__{args.tag}" if args.tag else "") + ".json")
+                if args.skip_done and f.exists():
+                    prev = json.loads(f.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        continue
+                rec = run_cell(arch, shape, mp, out_dir, kv_quant=args.kv_quant,
+                               tag=args.tag, save_hlo=args.save_hlo)
+                n_ok += rec["status"] == "ok"
+                n_fail += rec["status"] == "error"
+                n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped (documented)")
+
+
+if __name__ == "__main__":
+    main()

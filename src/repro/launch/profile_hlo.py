@@ -1,0 +1,86 @@
+"""Collective profiler: attribute weighted collective bytes to source ops.
+
+Parses a saved compiled-HLO dump (dryrun --save-hlo) and prints the top
+collectives by execution-multiplicity-weighted bytes, with the jax op_name
+metadata that names the responsible source operation — the dry-run
+equivalent of reading a profiler's comm lanes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.profile_hlo results/dryrun/<cell>.hlo.txt.gz [top_n]
+"""
+
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+
+from repro.launch.roofline import (
+    _analyze_computation,
+    _split_computations,
+    _while_trip_counts,
+    _INSTR_RE,
+    _build_symtab,
+    _COLLECTIVES,
+    _operand_names,
+    _entry_name,
+)
+
+
+def collect(hlo: str, top_n: int = 15):
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(comps)
+    stats = {n: _analyze_computation(lines) for n, lines in comps.items()}
+    mult: dict[str, float] = {}
+
+    def visit(name, m, depth=0):
+        if name not in stats or depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for child, is_wb in stats[name].children:
+            visit(child, m * (trips.get(child, 1) if is_wb else 1), depth + 1)
+
+    entry = _entry_name(hlo)
+    if entry:
+        visit(entry, 1.0)
+
+    rows = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        symtab = _build_symtab(lines)
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            clean = re.sub(r"metadata=\{[^}]*\}", " ", im.group(2))
+            for op in _COLLECTIVES:
+                tok = f" {op}(" if f" {op}(" in clean else (
+                    f" {op}-start(" if f" {op}-start(" in clean else None)
+                if tok is None:
+                    continue
+                bytes_ = sum(symtab.get(o, 0.0) for o in _operand_names(clean, tok))
+                nm = re.search(r'op_name="([^"]*)"', im.group(2))
+                rows.append((bytes_ * m, bytes_, m, op, cname,
+                             (nm.group(1) if nm else "?")[-110:]))
+                break
+    rows.sort(reverse=True)
+    return rows[:top_n]
+
+
+def main() -> None:
+    path = sys.argv[1]
+    top_n = int(sys.argv[2]) if len(sys.argv) > 2 else 15
+    hlo = gzip.decompress(open(path, "rb").read()).decode() if path.endswith(".gz") else open(path).read()
+    total = 0.0
+    rows = collect(hlo, top_n)
+    print(f"{'weighted_GB':>11} {'per_exec_MB':>11} {'mult':>6}  op              source")
+    for wb, b, m, op, cname, opname in rows:
+        total += wb
+        print(f"{wb/1e9:>11.2f} {b/1e6:>11.1f} {m:>6.0f}  {op:<15} {opname}")
+    print(f"top-{top_n} total: {total/1e9:.1f} GB weighted")
+
+
+if __name__ == "__main__":
+    main()

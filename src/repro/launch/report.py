@@ -1,0 +1,109 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+Prints markdown; the checked-in EXPERIMENTS.md embeds this output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.launch.roofline import HW
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (train, dense) / 6*N_active*D (MoE) / 2*N*tokens (decode)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    n = cfg.n_active_params
+    if sh.kind == "train":
+        return 6.0 * n * sh.global_batch * sh.seq_len
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len
+    return 2.0 * n * sh.global_batch  # decode: one token per sequence
+
+
+def load(dir_: pathlib.Path, mesh: str) -> dict:
+    out = {}
+    for f in sorted(dir_.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        out[(d.get("arch", f.stem.split("__")[0]), d.get("shape", f.stem.split("__")[1]))] = d
+    return out
+
+
+def render(dir_: pathlib.Path) -> str:
+    hw = HW()
+    chips = 256
+    lines = []
+    single = load(dir_, "single")
+    multi = load(dir_, "multi")
+
+    lines.append("### Dry-run matrix (status x mesh)\n")
+    lines.append("| arch | shape | 16x16 | 2x16x16 | HBM/dev (single) | fits 16GB |")
+    lines.append("|---|---|---|---|---|---|")
+    for arch in list_archs(assigned_only=True):
+        for shape in SHAPES:
+            s = single.get((arch, shape))
+            m = multi.get((arch, shape))
+            if s is None:
+                continue
+            if s["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skip | skip | — | — |")
+                continue
+            hbm = s["memory_analysis"]["per_device_hbm_bytes"] / 1e9
+            fits = "yes" if s["memory_analysis"]["fits_16GB"] else "**no**"
+            ms = m["status"] if m else "?"
+            lines.append(
+                f"| {arch} | {shape} | {s['status']} | {ms} | {hbm:.2f} GB | {fits} |"
+            )
+
+    lines.append("\n### Roofline (single-pod 16x16, per chip)\n")
+    lines.append(
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MODEL_FLOPS/HLO_FLOPs | note |"
+    )
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for arch in list_archs(assigned_only=True):
+        for shape in SHAPES:
+            s = single.get((arch, shape))
+            if not s or s["status"] != "ok":
+                continue
+            rr = s["roofline"]
+            mf = model_flops(arch, shape) / chips
+            ratio = mf / max(rr["flops"], 1.0)
+            dom = rr["bottleneck"]
+            note = {
+                "compute": "MXU-bound: raise arithmetic efficiency (larger tiles/fusion)",
+                "memory": "HBM-bound: shrink resident/streamed bytes (quantize more, shard wider)",
+                "collective": "ICI-bound: cut comms (SP/FSDP schedule, fewer regathers, overlap)",
+            }[dom]
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(rr['compute_s'])} | {_fmt_s(rr['memory_s'])} "
+                f"| {_fmt_s(rr['collective_s'])} | {dom} | {ratio:.2f} | {note} |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(
+        pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"))
+    args = ap.parse_args()
+    print(render(pathlib.Path(args.dir)))
+
+
+if __name__ == "__main__":
+    main()

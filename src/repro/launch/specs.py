@@ -1,0 +1,219 @@
+"""Per-cell setup for the multi-pod dry-run: step fn + ShapeDtypeStruct args
++ sharding specs, for every (arch x shape x mesh) combination.
+
+``input_specs`` follows the assignment contract: weak-type-correct,
+shardable ShapeDtypeStruct stand-ins for every model input — nothing is
+allocated. The FULL architecture configs only ever exist through here.
+
+Shape kinds lower different entry points (assignment spec):
+  train_*   -> train_step   (fp params + AdamW state, grad-accum scan)
+  prefill_* -> prefill step (QUANTIZED params: the paper's serving path)
+  decode_* / long_* -> serve_step (one new token against a seq_len KV cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.core.qlinear import QLinearConfig
+from repro.distributed.param_sharding import build_cache_specs, build_param_specs
+from repro.launch.mesh import MODEL_AXIS_SIZE, batch_axes_for
+from repro.models.model import build, quantize_params
+from repro.optim.adamw import AdamWConfig
+from repro.serving.engine import ServeConfig, make_prefill_step, make_serve_step
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+__all__ = ["CellSetup", "make_rules", "build_cell", "input_specs", "runnable", "skip_reason"]
+
+
+@dataclasses.dataclass
+class CellSetup:
+    arch: str
+    shape: str
+    multi_pod: bool
+    step_fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_specs: tuple  # PartitionSpec pytrees (same structure as args)
+    rules: dict
+    cfg: ModelConfig
+    meta: dict
+
+
+def make_rules(cfg: ModelConfig, multi_pod: bool, batch_shardable: bool = True,
+               seq_parallel: bool = False, seq_len: int = 0) -> dict:
+    """Logical-axis -> mesh-axis map with per-arch divisibility fallbacks.
+
+    seq_parallel=True shards the RESIDUAL-STREAM seq dim on "model" (Megatron
+    SP): layernorms/residuals run on seq shards, GSPMD inserts the all-gather
+    before attention/MLP and the reduce-scatter after — activation memory and
+    the per-layer activation all-reduce both drop by the TP degree.
+    """
+    m = MODEL_AXIS_SIZE
+    batch = batch_axes_for(multi_pod) if batch_shardable else None
+    fits = lambda dim: (dim or 0) % m == 0 and dim
+    return {
+        "batch": batch,
+        "seq": None,
+        "seq_sp": "model" if (seq_parallel and fits(seq_len)) else None,
+        "d_model": None,
+        "heads_flat": "model" if fits(cfg.n_heads * cfg.head_dim) else None,
+        "kv_heads": "model" if fits(cfg.n_kv_heads) else None,
+        "d_ff": "model" if fits(cfg.d_ff) else None,
+        "vocab": "model",  # vocab_padded is always a multiple of 128
+        "experts": "model" if fits(cfg.n_experts) else None,
+        "dispatch_groups": batch,  # group-local MoE dispatch follows DP
+        "d_inner": "model" if fits(cfg.d_inner) else None,
+        "state": None,
+    }
+
+
+def runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    return skip_reason(cfg, shape) is None
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return (
+            "pure full-attention arch: 500k decode requires sub-quadratic "
+            "attention (DESIGN.md §5); run only for SSM/SWA/hybrid"
+        )
+    return None
+
+
+def _batch_shards(multi_pod: bool) -> int:
+    return 32 if multi_pod else 16
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the model inputs of one cell (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: one new token, cache of length s
+        out = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens, cfg.d_model), cdt)
+    return out
+
+
+def _batch_pspec(batch_specs: dict, batch_axes) -> dict:
+    return {
+        k: P(batch_axes, *([None] * (len(v.shape) - 1)))
+        for k, v in batch_specs.items()
+    }
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               quantized_serving: bool = True, kv_quant: bool = False,
+               overrides: dict | None = None) -> CellSetup:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {reason}")
+    model = build(cfg)
+    shards = _batch_shards(multi_pod)
+    batch_shardable = shape.global_batch % shards == 0
+    # Megatron SP for wide-activation training cells (residual stream sharded
+    # on "model"); see make_rules. Enabled where activations dominate HBM.
+    seq_parallel = shape.kind == "train" and cfg.d_model >= 4096
+    rules = make_rules(cfg, multi_pod, batch_shardable,
+                       seq_parallel=seq_parallel, seq_len=shape.seq_len)
+    batch_axes = rules["batch"]
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        # Microbatch count trades activation memory against FSDP/TP gradient-
+        # reduction traffic (grad collectives scale LINEARLY with microbatches
+        # — §Perf iteration C1: 16 micro cost 191 s/step of ICI on the 104B).
+        # With SP + double remat the activations fit at micro=2 even at 104B.
+        max_micro = 4 if cfg.n_params > 50e9 else 8
+        micro = max(1, min(max_micro, shape.global_batch // shards))
+        tc = TrainConfig(optimizer=AdamWConfig(), microbatches=micro)
+        state_shapes = jax.eval_shape(partial(init_train_state, model, key, tc))
+        batch_shapes = input_specs(cfg, shape)
+        # ZeRO-3/FSDP when TP-sharded (params + adam moments + grads) would
+        # blow the 16 GB HBM: bf16 params + 2x f32 moments + f32 grads = 14 B/p
+        fsdp = None
+        if cfg.n_params * 14 / MODEL_AXIS_SIZE > 8e9 and batch_shardable:
+            fsdp = batch_axes
+        kw = dict(fsdp_axes=fsdp, fsdp_shards=shards if fsdp else 1)
+        pspecs = build_param_specs(state_shapes["params"], MODEL_AXIS_SIZE, **kw)
+        state_specs = {
+            "params": pspecs,
+            "opt": {
+                "m": build_param_specs(state_shapes["opt"]["m"], MODEL_AXIS_SIZE, **kw),
+                "v": build_param_specs(state_shapes["opt"]["v"], MODEL_AXIS_SIZE, **kw),
+                "step": P(),
+            },
+        }
+        return CellSetup(
+            arch, shape_name, multi_pod,
+            step_fn=make_train_step(model, tc),
+            args=(state_shapes, batch_shapes),
+            in_specs=(state_specs, _batch_pspec(batch_shapes, batch_axes)),
+            rules=rules, cfg=cfg,
+            meta={"kind": "train", "microbatches": micro, "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    # ---- serving cells -----------------------------------------------------
+    # decode: dynamic Orizuru detection (1-token sorts are free; Fig 3 says
+    # dynamic is more accurate). prefill: OASIS-S static thresholds with
+    # dense masked compensation — full sorts over 32k-token activations cost
+    # ~70 GB/device of workspace (EXPERIMENTS §Perf P1).
+    qcfg = QLinearConfig(
+        outlier_frac=0.005,
+        detection="dynamic" if shape.kind == "decode" else "static_dense",
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+    )
+    sc = ServeConfig(cache_len=shape.seq_len, qconfig=qcfg, kv_quant=kv_quant,
+                     quantized=quantized_serving)
+    params_shapes = jax.eval_shape(partial(model.init, key))
+    if quantized_serving:
+        params_shapes = jax.eval_shape(partial(quantize_params, qcfg=qcfg), params_shapes)
+    cache_dt = jnp.dtype("bfloat16")
+    caches_shapes = jax.eval_shape(
+        partial(model.init_caches, shape.global_batch, shape.seq_len, cache_dt, kv_quant)
+    )
+    pspecs = build_param_specs(params_shapes, MODEL_AXIS_SIZE)
+    cspecs = build_cache_specs(
+        caches_shapes, batch_axes, shards, MODEL_AXIS_SIZE,
+        kv_heads=cfg.n_kv_heads, ssm_state=cfg.ssm_state,
+    )
+    batch_shapes = input_specs(cfg, shape)
+
+    if shape.kind == "prefill":
+        return CellSetup(
+            arch, shape_name, multi_pod,
+            step_fn=make_prefill_step(model, sc),
+            args=(params_shapes, caches_shapes, batch_shapes),
+            in_specs=(pspecs, cspecs, _batch_pspec(batch_shapes, batch_axes)),
+            rules=rules, cfg=cfg,
+            meta={"kind": "prefill", "quantized": quantized_serving,
+                  "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    # decode
+    tok_spec = {"tokens": batch_shapes["tokens"]}
+    return CellSetup(
+        arch, shape_name, multi_pod,
+        step_fn=make_serve_step(model, sc),
+        args=(params_shapes, caches_shapes, tok_spec["tokens"],
+              jax.ShapeDtypeStruct((), jnp.int32)),
+        in_specs=(pspecs, cspecs, P(batch_axes, None), P()),
+        rules=rules, cfg=cfg,
+        meta={"kind": "decode", "quantized": quantized_serving, "kv_quant": kv_quant,
+              "tokens": shape.global_batch},
+    )

@@ -1,0 +1,1 @@
+"""Model substrate: layers + the 10 assigned architecture families."""

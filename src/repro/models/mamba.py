@@ -1,0 +1,199 @@
+"""Mamba-1 selective SSM decoder (falcon-mamba-7b).
+
+Attention-free: each block is in_proj -> causal depthwise conv -> selective
+SSM -> gated out_proj. Training uses a *chunked* associative scan (parallel
+within a chunk, sequential across chunks) so the (B, T, d_inner, N) discretized
+operands never materialize for the full sequence — the memory/throughput
+trade-off is the chunk size. Decode carries an O(B * d_inner * N) state and a
+(conv_w-1)-deep conv tail: long_500k decodes with **constant** memory, which
+is why this arch runs the 500k cell.
+
+Quantization applicability (DESIGN.md §5): in/x/dt/out projections are
+QLinear-able GEMMs (the bulk of FLOPs/bytes); the recurrence itself is
+elementwise and stays fp.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+__all__ = ["init", "apply", "init_caches"]
+
+_CHUNK = 128  # associative-scan chunk (memory knob; halving it was measured at <1% HBM — the (B,S,di,N) scan output dominates, not the chunk workspace)
+
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias init for softplus in [1e-3, 1e-1]
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (di,)) * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)
+    )
+    return {
+        "norm": L.norm_init(d, cfg.norm, dtype),
+        "in_proj": L.dense_init(ks[1], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, di)) / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(ks[3], di, r + 2 * n, dtype),
+        "dt_proj": L.dense_init(ks[4], r, di, dtype, bias=True),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),  # inverse softplus
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = (
+        jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys)
+        if cfg.scan_layers
+        else [_init_block(k, cfg, dtype) for k in keys]
+    )
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": blocks,
+        "norm_f": L.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype)
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int = 0, dtype=jnp.float32,
+                quantized: bool = False):
+    """SSM state + conv tail per layer (cache_len unused: state is O(1);
+    quantized is a no-op — there is no KV cache to quantize)."""
+    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    one = lambda: {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, di), dtype),
+    }
+    if cfg.scan_layers:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
+    return [one() for _ in range(cfg.n_layers)]
+
+
+def _conv_causal(x, w, b, tail=None):
+    """Depthwise causal conv. x: (B, S, di); w: (cw, di). tail: (B, cw-1, di)."""
+    cw = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw))
+    new_tail = xp[:, -(cw - 1) :] if cw > 1 else None
+    return y + b.astype(x.dtype), new_tail
+
+
+def _ssm_scan(a, bx, h0):
+    """Chunked linear recurrence h_t = a_t*h_{t-1} + bx_t.
+
+    a, bx: (B, S, di, N) f32; h0: (B, di, N). Returns (ys (B,S,di,N), h_S).
+    """
+    bsz, s, di, n = a.shape
+    chunk = min(_CHUNK, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} must be divisible by scan chunk {chunk}")
+    nc = s // chunk
+    a_c = a.reshape(bsz, nc, chunk, di, n).swapaxes(0, 1)
+    b_c = bx.reshape(bsz, nc, chunk, di, n).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, xs):
+        ac, bc = xs  # (B, chunk, di, N)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = a_cum * h[:, None] + b_cum
+        return hs[:, -1], hs
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    ys = ys.swapaxes(0, 1).reshape(bsz, s, di, n)
+    return ys, h_final
+
+
+def _block_apply(p, x, cfg: ModelConfig, cache):
+    """One Mamba block. x: (B, S, d)."""
+    di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    residual = x
+    x = L.norm_apply(p["norm"], x, cfg.norm)
+    xz = L.dense_apply(p["in_proj"], x, "mamba.in_proj")
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", "seq", "d_inner")
+
+    tail = cache["conv"] if cache is not None else None
+    xs, new_tail = _conv_causal(xs, p["conv_w"], p["conv_b"], tail)
+    xs = jax.nn.silu(xs)
+
+    proj = L.dense_apply(p["x_proj"], xs, "mamba.x_proj").astype(jnp.float32)
+    dt, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        L.dense_apply(p["dt_proj"], dt.astype(xs.dtype), "mamba.dt_proj").astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B, S, di)
+    a = -jnp.exp(p["A_log"])  # (di, N)
+    xf = xs.astype(jnp.float32)
+
+    a_bar = jnp.exp(dt[..., None] * a)  # (B, S, di, N)
+    bx = (dt * xf)[..., None] * bmat[..., None, :]  # (B, S, di, N)
+
+    h0 = (
+        cache["h"]
+        if cache is not None
+        else jnp.zeros((x.shape[0], di, n), jnp.float32)
+    )
+    hs, h_final = _ssm_scan(a_bar, bx, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat) + p["D"] * xf  # (B, S, di)
+    y = (y.astype(xs.dtype)) * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "d_inner")
+    out = L.dense_apply(p["out_proj"], y, "mamba.out_proj")
+    new_cache = None if cache is None else {"h": h_final, "conv": new_tail}
+    return residual + out, new_cache
+
+
+def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches=None, last_only: bool = False, return_hidden_only: bool = False):
+    from repro.models.transformer import _embed_in, _logits_out
+
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    x = _embed_in(params, cfg, tokens, positions)
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            if caches is None:
+                y, _ = _block_apply(xs, carry, cfg, None)
+                return y, None
+            p, c = xs
+            y, nc = _block_apply(p, carry, cfg, c)
+            return y, nc
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        xs = params["blocks"] if caches is None else (params["blocks"], caches)
+        x, new_caches = jax.lax.scan(body, x, xs)
+    else:
+        new_caches = []
+        for i, p in enumerate(params["blocks"]):
+            c = None if caches is None else caches[i]
+            x, nc = _block_apply(p, x, cfg, c)
+            new_caches.append(nc)
+        if caches is None:
+            new_caches = None
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden_only:
+        from repro.models.layers import norm_apply
+        return norm_apply(params["norm_f"], x, cfg.norm), new_caches
+    return _logits_out(params, cfg, x), new_caches

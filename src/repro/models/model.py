@@ -1,0 +1,212 @@
+"""Unified model API: family dispatch + quantized-inference transformation.
+
+``build(cfg)`` returns a :class:`Model` with a family-independent contract:
+
+    params               = model.init(key)
+    out                  = model.apply(params, batch)                 # train/prefill
+    out                  = model.apply(params, batch, caches=...)     # decode
+    caches               = model.init_caches(batch_size, cache_len)
+    qparams              = model.quantize(params, calib, qcfg)        # PTQ -> QLinearParams tree
+
+``out`` is a :class:`ModelOutput` (logits, caches, aux_loss). ``batch`` is a
+dict with "tokens" (B, S) and, for the VLM family, "image_embeds".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import QLinearConfig, QLinearParams
+from repro.core.quantize import fit_activation_codebook, quantize_weight
+from repro.models import mamba, moe, multimodal, rglru, transformer
+
+__all__ = ["Model", "ModelOutput", "build", "quantize_params", "unstack_for_capture",
+           "head_matrix"]
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "audio": transformer,  # musicgen backbone == decoder-only LM over codec tokens
+    "moe": moe,
+    "ssm": mamba,
+    "hybrid": rglru,
+    "vlm": multimodal,
+}
+
+
+@dataclasses.dataclass
+class ModelOutput:
+    logits: jax.Array | None  # (B, S, vocab_padded) f32 (None if hidden-only)
+    caches: Any = None
+    aux_loss: jax.Array | None = None
+    hidden: jax.Array | None = None  # final-norm hidden states (B, S, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def _mod(self):
+        return _FAMILY_MODULES[self.cfg.family]
+
+    def init(self, key) -> dict:
+        return self._mod.init(key, self.cfg)
+
+    def init_caches(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                    quantized: bool = False):
+        return self._mod.init_caches(self.cfg, batch, cache_len, dtype, quantized)
+
+    def apply(self, params, batch: dict, *, positions=None, caches=None,
+              last_only: bool = False, return_hidden_only: bool = False) -> ModelOutput:
+        kwargs = dict(positions=positions, caches=caches, last_only=last_only,
+                      return_hidden_only=return_hidden_only)
+        if self.cfg.family == "vlm":
+            kwargs["image_embeds"] = batch["image_embeds"]
+        out = self._mod.apply(params, self.cfg, batch["tokens"], **kwargs)
+        if self.cfg.family == "moe":
+            val, caches_out, aux = out
+        else:
+            (val, caches_out), aux = out, None
+        if return_hidden_only:
+            return ModelOutput(None, caches_out, aux, hidden=val)
+        return ModelOutput(val, caches_out, aux)
+
+    def quantize(self, params, qcfg: QLinearConfig, calib: dict | None = None) -> dict:
+        return quantize_params(params, qcfg, calib)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise ValueError(f"unknown family {cfg.family}")
+    return Model(cfg)
+
+
+def head_matrix(model: Model, params) -> jax.Array:
+    """(d, vocab_padded) unembedding matrix (transposed table when tied)."""
+    if model.cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]
+
+
+def unstack_for_capture(model: Model, params):
+    """(model, scan-stacked params) -> (unscanned model, per-layer param list).
+
+    Calibration taps only fire in plain-Python forwards; scan bodies are
+    traced, so capture requires the unrolled (scan_layers=False) variant.
+    Supported for the single-stack families (dense/audio/moe/ssm)."""
+    cfg = model.cfg
+    if not cfg.scan_layers or cfg.family == "vlm":
+        return model, params
+    blocks = params["blocks"]
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    blocks_list = [jax.tree.map(lambda a: a[i], blocks) for i in range(n)]
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    return build(cfg2), {**params, "blocks": blocks_list}
+
+
+# ---------------------------------------------------------------------------
+# PTQ parameter transformation
+# ---------------------------------------------------------------------------
+
+# Keys whose 'w' leaves are the paper-quantizable projections. Router weights,
+# norms, embeddings and the lm head stay fp (paper: norms/softmax fp16;
+# router is tiny and accuracy-critical).
+_QUANT_KEYS = {
+    "wq", "wk", "wv", "wo", "wi", "wd",
+    "in_proj", "x_proj", "dt_proj", "out_proj",
+    "lin_y", "lin_x", "lin_out", "w_a", "w_x",
+}
+_SKIP_KEYS = {"router", "head", "embed", "shared_gate"}
+
+
+def _default_codebook(nbits: int, method: str = "kmeans") -> jax.Array:
+    """Structural activation codebook (gaussian quantiles) for when no
+    calibration activations are available (dry-run / structural quantization).
+    Real deployments calibrate via repro.core.calibration."""
+    if method == "uniform":
+        return jnp.linspace(-2.5, 2.5, 2**nbits)
+    from jax.scipy.stats import norm as _norm
+
+    qs = (jnp.arange(2**nbits, dtype=jnp.float32) + 0.5) / (2**nbits)
+    return _norm.ppf(qs).astype(jnp.float32)
+
+
+def quantize_params(params, qcfg: QLinearConfig, calib: dict | None = None, path: str = ""):
+    """Recursively replace quantizable fp linears with QLinearParams.
+
+    ``calib``: optional {tap_name: (tokens, K) activations} from
+    ``core.calibration.capture`` — when provided, activation codebooks are
+    learned per layer; otherwise the structural gaussian codebook is used.
+    Works on stacked (scan) params via vmap.
+    """
+    if isinstance(params, list):
+        return [quantize_params(p, qcfg, calib, f"{path}[{i}]") for i, p in enumerate(params)]
+    if not isinstance(params, dict):
+        return params
+    out = {}
+    for k, v in params.items():
+        sub = f"{path}.{k}" if path else k
+        if k in _SKIP_KEYS:
+            out[k] = v
+        elif k in _QUANT_KEYS and isinstance(v, dict) and "w" in v:
+            out[k] = _quantize_one(v, qcfg, calib, sub)
+        elif isinstance(v, (dict, list)):
+            out[k] = quantize_params(v, qcfg, calib, sub)
+        else:
+            out[k] = v
+    return out
+
+
+def _quantize_one(p: dict, qcfg: QLinearConfig, calib: dict | None, path: str):
+    w = p["w"]
+    bias = p.get("b")
+
+    def one(w2d, b1d):
+        qw = quantize_weight(w2d.astype(jnp.float32), nbits=qcfg.w_bits, method=qcfg.method)
+        book = _codebook_for(path, w2d.shape[0], qcfg, calib)
+        thr_lo = thr_hi = None
+        if qcfg.detection in ("static", "static_dense"):
+            acts = _calib_for(path, calib)
+            if acts is not None:
+                from repro.core.outlier import static_thresholds
+
+                thr_lo, thr_hi = static_thresholds(acts, qcfg.outlier_frac)
+            else:
+                thr_lo, thr_hi = jnp.float32(-3.0), jnp.float32(3.0)
+        return QLinearParams(qw=qw, act_codebook=book, bias=b1d, thr_lo=thr_lo, thr_hi=thr_hi)
+
+    if w.ndim < 2:
+        raise ValueError(f"unexpected weight rank {w.ndim} at {path}")
+    # vmap over stacked scan axes (layers, or vlm's groups x layers)
+    if bias is None:
+        fn = lambda wi: one(wi, None)
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(w)
+    fn = one
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w, bias)
+
+
+def _calib_for(path: str, calib: dict | None):
+    if not calib:
+        return None
+    leaf = path.split(".")[-1].split("[")[0]
+    for name, acts in calib.items():
+        if name.endswith(leaf) or leaf in name:
+            return acts
+    return None
+
+
+def _codebook_for(path: str, k_dim: int, qcfg: QLinearConfig, calib: dict | None):
+    acts = _calib_for(path, calib)
+    if acts is not None:
+        return fit_activation_codebook(acts, nbits=qcfg.a_bits,
+                                       scale_mode=qcfg.scale_mode, method=qcfg.method)
+    return _default_codebook(qcfg.a_bits, qcfg.method)

@@ -1,0 +1,238 @@
+"""Mixture-of-Experts decoder LM (granite-moe, qwen2-moe).
+
+Token-choice top-k routing with a *sort-based* dispatch (argsort by expert id,
+capacity-bounded slots) rather than the (T, E, C) one-hot dispatch tensor —
+the one-hot form is O(T·E·C) memory and does not survive 1M-token batches;
+the sort form is O(T·k) and shards cleanly (capacity dim constrained onto the
+"data" axis, expert hidden dim onto "model").
+
+Includes qwen2-style shared experts (a wide dense MLP with a sigmoid gate —
+the sum of N parallel gated MLPs is algebraically one N×-wide gated MLP) and
+a load-balancing auxiliary loss (Switch-style), returned to the trainer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain, replicate
+from repro.models import layers as L
+
+__all__ = ["init", "apply", "init_caches", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert capacity for a dispatch group, rounded to 8."""
+    c = n_tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts
+    return max(8, int(math.ceil(c / 8.0)) * 8)
+
+
+def _moe_init(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    mult = 2 if cfg.act_fn in ("silu", "gelu") else 1
+    kr, k1, k2, ks, kg = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(kr, d, e, jnp.float32),  # router kept fp32 (accuracy-critical)
+        "wi": (jax.random.normal(k1, (e, d, mult * f)) / math.sqrt(d)).astype(dtype),
+        "wd": (jax.random.normal(k2, (e, f, d)) / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        f_sh = cfg.n_shared_experts * cfg.shared_expert_d_ff
+        p["shared"] = L.mlp_init(ks, d, f_sh, cfg.act_fn, dtype)
+        p["shared_gate"] = L.dense_init(kg, d, 1, dtype)
+    return p
+
+
+def _dispatch_group(xg, topi_g, topw_g, e: int, cap: int, dtype):
+    """Sort-based dispatch for ONE token group (vmapped over groups).
+
+    xg: (Tg, d), topi_g/topw_g: (Tg, k). Returns
+    (expert_in (E, cap, d), slot (F,), st (F,), keep (F,), sw (F,)).
+    """
+    tg, k = topi_g.shape
+    f = tg * k
+    e_flat = topi_g.reshape(f)
+    w_flat = topw_g.reshape(f)
+    t_flat = jnp.arange(f, dtype=jnp.int32) // k
+    order = jnp.argsort(e_flat, stable=True)
+    se, st, sw = e_flat[order], t_flat[order], w_flat[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(f, dtype=jnp.int32) - start[se]
+    keep = pos_in_e < cap
+    # overflow tokens: clamp into the last slot of their expert with a ZEROED
+    # value — .add of zeros never corrupts, and every dim stays shardable.
+    slot = jnp.where(keep, se * cap + pos_in_e, se * cap + cap - 1)
+    values = (xg[st] * keep[:, None]).astype(dtype)
+    expert_in = jnp.zeros((e * cap, xg.shape[-1]), dtype).at[slot].add(values)
+    return expert_in.reshape(e, cap, -1), slot, st, keep, sw
+
+
+def _combine_group(eo_g, slot, st, keep, sw, tg: int, dtype):
+    """eo_g: (E*cap, d) -> (Tg, d) weighted combine for one group."""
+    gathered = eo_g[jnp.where(keep, slot, 0)] * (sw * keep)[:, None].astype(dtype)
+    return jnp.zeros((tg, eo_g.shape[-1]), dtype).at[st].add(gathered)
+
+
+def _moe_apply(p, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (out, aux_loss).
+
+    GROUP-LOCAL dispatch: tokens are split into ``cfg.moe_dispatch_groups``
+    contiguous groups aligned with the DP sharding; each group sorts only its
+    own tokens into per-group expert capacity (the per-device-capacity
+    pattern of real EP systems). All scatters/gathers keep the sharded group
+    dim -> zero cross-shard token movement; the only collective left in the
+    MoE layer is the Megatron-style psum of the down-projection (expert FFN
+    hidden dim sharded on "model"). A global sort instead forces GSPMD into
+    replicated scatter fallbacks (observed 61 GB/device + TB-scale
+    all-reduces on granite train_4k; see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    g = max(1, min(cfg.moe_dispatch_groups, t))
+    while t % g:
+        g -= 1
+    tg = t // g
+    cap = moe_capacity(tg, cfg)
+    xg = x.reshape(g, tg, d)
+
+    gates = jax.nn.softmax(xg.astype(jnp.float32) @ p["router"]["w"], axis=-1)  # (G, Tg, E)
+    topw, topi = jax.lax.top_k(gates, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch): E * <frac_tokens_e> . <mean_gate_e>
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=-2), axis=(0, 1)
+    )
+    aux = e * jnp.sum(frac * jnp.mean(gates, axis=(0, 1))) / k
+
+    expert_in, slot, st, keep, sw = jax.vmap(
+        lambda xx, ii, ww: _dispatch_group(xx, ii, ww, e, cap, x.dtype)
+    )(xg, topi, topw)
+    expert_in = constrain(expert_in, "dispatch_groups", "experts", None, None)
+
+    # ---- expert computation ---------------------------------------------
+    # §Perf G3: expert weights are STORED "model"-sharded (param specs) but
+    # GATHERED at use (ZeRO-3 over the model axis). With f-sharded compute the
+    # up-projection's BACKWARD psums the 10x-expanded (G,E,cap,d) activation
+    # gradient (col-parallel transpose) — gathering the weights instead turns
+    # that into a reduce-scatter of the 12x-smaller WEIGHT gradient.
+    h = jnp.einsum("gecd,edf->gecf", expert_in, replicate(p["wi"].astype(x.dtype)))
+    if cfg.act_fn in ("silu", "gelu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(gate) if cfg.act_fn == "silu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jnp.square(jax.nn.relu(h))
+    # §Perf G2: the down-projection contracts the "model"-sharded expert
+    # hidden dim; a psum of the 10x-EXPANDED (G,E,cap,d) partial output cost
+    # 1 GB/exec (fwd) + 2x (bwd) on granite train_4k, and GSPMD would not
+    # defer it past the combine (G1, refuted). Instead we re-shard BEFORE the
+    # contraction: all-gather h to full expert-hidden (84 MB/exec) and the
+    # expert down-weights (63 MB/layer), then contract locally — 12x fewer
+    # collective bytes for this layer at f=512.
+    h = constrain(h, "dispatch_groups", "experts", None, None)
+    eo = jnp.einsum("gecf,efd->gecd", h, replicate(p["wd"].astype(x.dtype)))
+
+    out = jax.vmap(
+        lambda ee, sl, tt, kk, ww: _combine_group(ee.reshape(e * cap, d), sl, tt, kk, ww, tg, x.dtype)
+    )(eo, slot, st, keep, sw)
+    out = constrain(out, "dispatch_groups", None, None).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        # shared expert operates on the 3D (B, S, d) stream so the standard
+        # ("batch", "seq", "d_ff") activation constraints apply
+        sg = jax.nn.sigmoid(L.dense_apply(p["shared_gate"], x).astype(jnp.float32))
+        out = out + (sg.astype(x.dtype) * L.mlp_apply(p["shared"], x, cfg.act_fn, "shared_mlp"))
+
+    return out, aux
+
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": L.attention_init(k1, cfg, dtype),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm, dtype),
+        "moe": _moe_init(k2, cfg, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys)
+    else:
+        blocks = [_init_block(k, cfg, dtype) for k in keys]
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": blocks,
+        "norm_f": L.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype)
+    return params
+
+
+from repro.models.transformer import _embed_in, _logits_out, init_caches as _tf_init_caches  # noqa: E402
+
+init_caches = _tf_init_caches
+
+
+def _block_apply(p, x, cfg: ModelConfig, positions, cache):
+    a, new_cache = L.attention_apply(
+        p["attn"], L.norm_apply(p["norm1"], x, cfg.norm), cfg,
+        positions=positions, cache=cache, window=cfg.sliding_window,
+    )
+    x = x + a
+    m, aux = _moe_apply(p["moe"], L.norm_apply(p["norm2"], x, cfg.norm), cfg)
+    x = x + m
+    return constrain(x, "batch", "seq_sp", "d_model"), new_cache, aux
+
+
+def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches=None, last_only: bool = False, return_hidden_only: bool = False):
+    """Returns (logits, new_caches, aux_loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    x = _embed_in(params, cfg, tokens, positions)
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            h, aux_sum = carry
+            if caches is None:
+                y, _, aux = _block_apply(xs, h, cfg, positions, None)
+                return (y, aux_sum + aux), None
+            p, c = xs
+            y, nc, aux = _block_apply(p, h, cfg, positions, c)
+            return (y, aux_sum + aux), nc
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        xs = params["blocks"] if caches is None else (params["blocks"], caches)
+        (x, aux_total), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i, p in enumerate(params["blocks"]):
+            c = None if caches is None else caches[i]
+            x, nc, aux = _block_apply(p, x, cfg, positions, c)
+            aux_total = aux_total + aux
+            new_caches.append(nc)
+        if caches is None:
+            new_caches = None
+
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden_only:
+        from repro.models.layers import norm_apply
+        return norm_apply(params["norm_f"], x, cfg.norm), new_caches, aux_total / cfg.n_layers
+    return _logits_out(params, cfg, x), new_caches, aux_total / cfg.n_layers

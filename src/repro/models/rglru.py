@@ -1,0 +1,181 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA attention.
+
+Block pattern (1 attention : 2 recurrent), e.g. 26 layers =
+8 x (rec, rec, attn) + (rec, rec). The stack is heterogeneous, so layers are
+laid out as an unrolled loop over the expanded pattern (26 small blocks keeps
+HLO manageable; the homogeneous families use scan).
+
+RG-LRU recurrence (Griffin eqs. 1-4), elementwise over the LRU width:
+    r_t = sigmoid(W_a u_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)          input gate
+    a_t = exp(c * r_t * log(sigmoid(L)))  with c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is elementwise -> the associative-scan helper from the mamba
+module is reused with state size 1. Local attention uses the shared ring-
+buffer KV cache with window = cfg.sliding_window, so long_500k decode holds
+O(window) keys — this arch runs the 500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.mamba import _conv_causal, _ssm_scan
+
+__all__ = ["init", "apply", "init_caches", "expanded_pattern"]
+
+_C_RGLRU = 8.0
+
+
+def expanded_pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    reps = -(-cfg.n_layers // len(cfg.block_pattern))
+    return (cfg.block_pattern * reps)[: cfg.n_layers]
+
+
+def _init_rec_block(key, cfg: ModelConfig, dtype):
+    d, di = cfg.d_model, cfg.d_inner or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": L.norm_init(d, cfg.norm, dtype),
+        "lin_y": L.dense_init(ks[0], d, di, dtype),
+        "lin_x": L.dense_init(ks[1], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, di)) / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_a": L.dense_init(ks[3], di, di, dtype, bias=True),
+        "w_x": L.dense_init(ks[4], di, di, dtype, bias=True),
+        "lambda": jnp.full((di,), 2.0, jnp.float32),  # sigmoid -> a ~ 0.88
+        "lin_out": L.dense_init(ks[5], di, d, dtype),
+        "norm2": L.norm_init(d, cfg.norm, dtype),
+        "mlp": L.mlp_init(jax.random.fold_in(key, 7), d, cfg.d_ff, cfg.act_fn, dtype),
+    }
+
+
+def _init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": L.attention_init(k1, cfg, dtype),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act_fn, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = []
+    for k, kind in zip(keys, expanded_pattern(cfg)):
+        blocks.append(
+            _init_rec_block(k, cfg, dtype) if kind == "rec" else _init_attn_block(k, cfg, dtype)
+        )
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": blocks,
+        "norm_f": L.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype)
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                quantized: bool = False):
+    di = cfg.d_inner or cfg.d_model
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    caches = []
+    for kind in expanded_pattern(cfg):
+        if kind == "rec":
+            caches.append(
+                {
+                    "h": jnp.zeros((batch, di), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+                }
+            )
+        else:
+            caches.append(L.init_kv_cache(cfg, batch, cache_len, dtype, quantized))
+    return caches
+
+
+def _rglru(p, u: jax.Array, h0: jax.Array):
+    """u: (B, S, di) post-conv activations; h0: (B, di) f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(L.dense_apply(p["w_a"], u, "rglru.wa").astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense_apply(p["w_x"], u, "rglru.wx").astype(jnp.float32))
+    log_a = jax.nn.log_sigmoid(p["lambda"])  # (di,) < 0
+    a = jnp.exp(_C_RGLRU * r * log_a)  # (B, S, di)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i * uf)
+    ys, h_final = _ssm_scan(a[..., None], gated[..., None], h0[..., None])
+    return ys[..., 0].astype(u.dtype), h_final[..., 0]
+
+
+def _rec_block_apply(p, x, cfg: ModelConfig, cache):
+    residual = x
+    n = L.norm_apply(p["norm1"], x, cfg.norm)
+    y = jax.nn.gelu(L.dense_apply(p["lin_y"], n, "rec.lin_y"))
+    u = L.dense_apply(p["lin_x"], n, "rec.lin_x")
+    u = constrain(u, "batch", "seq", "d_inner")
+    tail = cache["conv"] if cache is not None else None
+    u, new_tail = _conv_causal(u, p["conv_w"], p["conv_b"], tail)
+    h0 = (
+        cache["h"]
+        if cache is not None
+        else jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    )
+    u, h_final = _rglru(p, u, h0)
+    out = L.dense_apply(p["lin_out"], y * u, "rec.lin_out")
+    x = residual + out
+    x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["norm2"], x, cfg.norm), cfg.act_fn)
+    new_cache = None if cache is None else {"h": h_final, "conv": new_tail}
+    return constrain(x, "batch", "seq_sp", "d_model"), new_cache
+
+
+def _attn_block_apply(p, x, cfg: ModelConfig, positions, cache):
+    a, new_cache = L.attention_apply(
+        p["attn"], L.norm_apply(p["norm1"], x, cfg.norm), cfg,
+        positions=positions, cache=cache, window=cfg.sliding_window,
+    )
+    x = x + a
+    x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["norm2"], x, cfg.norm), cfg.act_fn)
+    return constrain(x, "batch", "seq_sp", "d_model"), new_cache
+
+
+def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches=None, last_only: bool = False, return_hidden_only: bool = False):
+    from repro.models.transformer import _embed_in, _logits_out
+
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    x = _embed_in(params, cfg, tokens, positions)
+
+    rec_fn, attn_fn = _rec_block_apply, _attn_block_apply
+    if cfg.remat != "none" and caches is None:
+        # the heterogeneous stack is unrolled, so remat must wrap each block
+        # explicitly (the scan families checkpoint their scan body instead)
+        rec_fn = jax.checkpoint(_rec_block_apply, static_argnums=(2,))
+        attn_fn = jax.checkpoint(_attn_block_apply, static_argnums=(2,))
+
+    new_caches = []
+    for i, (p, kind) in enumerate(zip(params["blocks"], expanded_pattern(cfg))):
+        c = None if caches is None else caches[i]
+        if kind == "rec":
+            x, nc = rec_fn(p, x, cfg, c)
+        else:
+            x, nc = attn_fn(p, x, cfg, positions, c)
+        new_caches.append(nc)
+    if caches is None:
+        new_caches = None
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden_only:
+        from repro.models.layers import norm_apply
+        return norm_apply(params["norm_f"], x, cfg.norm), new_caches
+    return _logits_out(params, cfg, x), new_caches

@@ -1,0 +1,158 @@
+"""Dense decoder-only transformer LM.
+
+Covers llama3.2-1b, h2o-danube (SWA), command-r-plus (parallel blocks,
+LayerNorm, no bias), nemotron-4 (squared-ReLU, LayerNorm) and the musicgen
+backbone (sinusoidal positions, EnCodec-token vocab). Layer stack runs under
+``lax.scan`` over stacked params so HLO size is depth-independent; optional
+per-block remat.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+__all__ = ["init", "apply", "init_caches"]
+
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": L.attention_init(k1, cfg, dtype),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act_fn, dtype),
+    }
+    if not cfg.parallel_blocks:
+        p["norm2"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys)
+    else:
+        blocks = [_init_block(k, cfg, dtype) for k in keys]
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": blocks,
+        "norm_f": L.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype)
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                quantized: bool = False):
+    """Stacked (L, ...) ring-buffer KV caches; cache_len should be the window
+    for SWA archs (bounded memory at 500k) and max_seq otherwise.
+    quantized=True -> K-Means int4 KV storage (see layers.init_kv_cache)."""
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    one = lambda: L.init_kv_cache(cfg, batch, cache_len, dtype, quantized)
+    if cfg.scan_layers:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
+    return [one() for _ in range(cfg.n_layers)]
+
+
+def _block_apply(p, x, cfg: ModelConfig, positions, cache):
+    window = cfg.sliding_window
+    if cfg.parallel_blocks:
+        n = L.norm_apply(p["norm1"], x, cfg.norm)
+        a, new_cache = L.attention_apply(
+            p["attn"], n, cfg, positions=positions, cache=cache, window=window
+        )
+        m = L.mlp_apply(p["mlp"], n, cfg.act_fn)
+        x = x + a + m
+    else:
+        a, new_cache = L.attention_apply(
+            p["attn"], L.norm_apply(p["norm1"], x, cfg.norm), cfg,
+            positions=positions, cache=cache, window=window,
+        )
+        x = x + a
+        x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["norm2"], x, cfg.norm), cfg.act_fn)
+    return constrain(x, "batch", "seq_sp", "d_model"), new_cache
+
+
+def _embed_in(params, cfg: ModelConfig, tokens, positions):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)[None]
+    return constrain(x, "batch", "seq_sp", "d_model")
+
+
+def _logits_out(params, cfg: ModelConfig, x):
+    x = L.norm_apply(params["norm_f"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].astype(x.dtype).T
+    else:
+        logits = L.dense_apply(params["head"], x)
+    return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches=None, last_only: bool = False, return_hidden_only: bool = False):
+    """Forward pass. tokens: (B, S) int32.
+
+    positions: (S,) absolute positions (defaults to arange — training/prefill).
+    caches: stacked KV caches for decode/prefill; returned updated.
+    Returns (logits f32 (B, S, vocab_padded), new_caches).
+    """
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    x = _embed_in(params, cfg, tokens, positions)
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            if caches is None:
+                p = xs
+                y, _ = _block_apply(p, carry, cfg, positions, None)
+                return y, None
+            p, c = xs
+            y, nc = _block_apply(p, carry, cfg, positions, c)
+            return y, nc
+
+        if cfg.remat in ("block", "double"):
+            body = jax.checkpoint(body)
+        if cfg.remat == "double" and caches is None:
+            # sqrt(L) checkpointing: nested checkpointed scans -> only O(sqrt L)
+            # residual-stream carries live at once instead of O(L). This is
+            # what brings the 104B train cell under HBM (EXPERIMENTS §Perf).
+            l = cfg.n_layers
+            g1 = max(d for d in range(1, int(l**0.5) + 1) if l % d == 0)
+
+            @jax.checkpoint
+            def group_body(carry, xs_group):
+                y, _ = jax.lax.scan(body, carry, xs_group)
+                return y, None
+
+            grouped = jax.tree.map(
+                lambda a: a.reshape(g1, l // g1, *a.shape[1:]), params["blocks"]
+            )
+            x, _ = jax.lax.scan(group_body, x, grouped)
+            new_caches = None
+        else:
+            xs = params["blocks"] if caches is None else (params["blocks"], caches)
+            x, new_caches = jax.lax.scan(body, x, xs)
+    else:
+        new_caches = []
+        for i, p in enumerate(params["blocks"]):
+            c = None if caches is None else caches[i]
+            x, nc = _block_apply(p, x, cfg, positions, c)
+            new_caches.append(nc)
+        if caches is None:
+            new_caches = None
+
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden_only:
+        from repro.models.layers import norm_apply
+        return norm_apply(params["norm_f"], x, cfg.norm), new_caches
+    return _logits_out(params, cfg, x), new_caches

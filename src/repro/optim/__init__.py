@@ -1,0 +1,5 @@
+"""Optimizers and schedules (pure JAX; no optax dependency offline)."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule"]

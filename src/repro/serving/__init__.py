@@ -1,0 +1,5 @@
+"""Quantized serving engine: prefill/decode with batched requests."""
+
+from repro.serving.engine import ServeConfig, ServingEngine, make_prefill_step, make_serve_step
+
+__all__ = ["ServeConfig", "ServingEngine", "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,140 @@
+"""Serving engine: the paper's end-to-end quantized inference path.
+
+``make_serve_step``/``make_prefill_step`` build the pure functions the
+multi-pod dry-run lowers (decode = one new token against a ring-buffer KV
+cache of the shape-specified length). ``ServingEngine`` wraps them into a
+batched request loop (greedy or temperature sampling, continuous slot reuse).
+
+The quantization story end-to-end:
+  weights    : K-Means W4 (QLinearParams tree)        — paper §III-A
+  activations: K-Means A4/A3 per token + outliers     — paper §III-A/C
+  KV cache   : optional K-Means int4 (beyond-paper)   — DESIGN.md §2
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QLinearConfig, use_apply_config
+from repro.models.model import Model
+
+__all__ = ["ServeConfig", "make_prefill_step", "make_serve_step", "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    cache_len: int = 4096
+    cache_dtype: str = "bfloat16"
+    kv_quant: bool = False
+    temperature: float = 0.0  # 0 => greedy
+    qconfig: QLinearConfig = QLinearConfig()
+    quantized: bool = True  # serve QLinearParams (False = fp baseline)
+
+
+def make_prefill_step(model: Model, sc: ServeConfig) -> Callable:
+    """prefill(params, caches, batch) -> (first_token (B,), caches, logits)."""
+
+    def prefill(params, caches, batch: dict):
+        s = batch["tokens"].shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        with use_apply_config(sc.qconfig):
+            out = model.apply(params, batch, positions=positions, caches=caches,
+                              last_only=True)
+        next_tok = jnp.argmax(out.logits[:, -1, : model.cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), out.caches, out.logits[:, -1]
+
+    return prefill
+
+
+def make_serve_step(model: Model, sc: ServeConfig) -> Callable:
+    """serve_step(params, caches, tokens (B,1), pos ()) -> (next (B,), caches).
+
+    This is the function the decode_32k / long_500k dry-run cells lower:
+    one token in, KV cache of the assigned context length, one token out.
+    """
+
+    def serve_step(params, caches, tokens: jax.Array, pos: jax.Array):
+        positions = pos[None].astype(jnp.int32)
+        batch = {"tokens": tokens}
+        if model.cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (tokens.shape[0], model.cfg.n_img_tokens, model.cfg.d_model),
+                jnp.dtype(model.cfg.compute_dtype),
+            )
+        with use_apply_config(sc.qconfig):
+            out = model.apply(params, batch, positions=positions, caches=caches)
+        logits = out.logits[:, -1, : model.cfg.vocab_size]
+        next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32), out.caches
+
+    return serve_step
+
+
+class ServingEngine:
+    """Batched generation over fixed request slots.
+
+    Requests are token prompts; the engine right-pads the batch to the slot
+    count, prefill fills the caches, then greedy/temperature decode runs to
+    ``max_new_tokens`` (per-request EOS masking). This is the "serve a small
+    model with batched requests" driver used by examples/serve_quantized.py.
+    """
+
+    def __init__(self, model: Model, params, sc: ServeConfig, batch_slots: int = 8):
+        self.model, self.sc, self.slots = model, sc, batch_slots
+        self.params = params
+        self._prefill = jax.jit(make_prefill_step(model, sc))
+        self._step = jax.jit(make_serve_step(model, sc))
+
+    def generate(
+        self, prompts: list[list[int]], max_new_tokens: int = 32, eos_id: int | None = None,
+        seed: int = 0,
+    ) -> list[list[int]]:
+        if len(prompts) > self.slots:
+            # simple continuous batching: chunk requests through the slots
+            out: list[list[int]] = []
+            for i in range(0, len(prompts), self.slots):
+                out += self.generate(prompts[i : i + self.slots], max_new_tokens, eos_id, seed)
+            return out
+
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = jnp.array(
+            [[0] * (plen - len(p)) + list(p) for p in prompts], dtype=jnp.int32
+        )  # left-pad so all prompts end at the same position
+        caches = self.model.init_caches(
+            b, self.sc.cache_len, jnp.dtype(self.sc.cache_dtype), quantized=self.sc.kv_quant
+        )
+        tok, caches, logits = self._prefill(self.params, caches, {"tokens": toks,
+            **self._img(b)})
+        key = jax.random.PRNGKey(seed)
+        done = jnp.zeros((b,), bool)
+        outs = [tok]
+        pos = plen
+        for _ in range(max_new_tokens - 1):
+            if self.sc.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / self.sc.temperature, axis=-1)
+            tok, caches = self._step(self.params, caches, tok[:, None], jnp.int32(pos))
+            if eos_id is not None:
+                done = done | (tok == eos_id)
+                tok = jnp.where(done, eos_id, tok)
+            outs.append(tok)
+            pos += 1
+            if eos_id is not None and bool(done.all()):
+                break
+        gen = jnp.stack(outs, axis=1)
+        return [list(map(int, row)) for row in gen]
+
+    def _img(self, b: int) -> dict:
+        if self.model.cfg.family != "vlm":
+            return {}
+        return {
+            "image_embeds": jnp.zeros(
+                (b, self.model.cfg.n_img_tokens, self.model.cfg.d_model),
+                jnp.dtype(self.model.cfg.compute_dtype),
+            )
+        }

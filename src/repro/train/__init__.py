@@ -1,0 +1,5 @@
+"""Training loop: loss, train_step (grad-accum scan), Trainer with FT hooks."""
+
+from repro.train.trainer import TrainConfig, Trainer, make_eval_step, make_train_step, loss_fn
+
+__all__ = ["TrainConfig", "Trainer", "make_eval_step", "make_train_step", "loss_fn"]

@@ -1,0 +1,189 @@
+"""Per-kernel validation: shape/dtype sweeps + property tests vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.codebook import boundaries_from_centroids
+from repro.core.outlier import detect_outliers_topk
+from repro.core.quantize import (
+    fit_activation_codebook,
+    quantize_activation,
+    quantize_weight,
+)
+from repro.kernels import ops, ref
+from repro.kernels.bucketize import bucketize_kernel_call
+from repro.kernels.lut_gemm import lut_gemm_kernel_call
+from repro.kernels.topk_outlier import topk_outlier_kernel_call
+
+
+def _books(seed, n_a=16, n_w=16):
+    a = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed), (n_a,)))
+    w = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed + 1), (n_w,)))
+    return a, w
+
+
+# ---------------------------------------------------------------------------
+# lut_gemm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (1, 128, 64, 8, 32, 128),     # decode-like M=1
+        (24, 256, 48, 16, 16, 128),   # ragged M/N vs blocks (padding path)
+        (128, 512, 128, 128, 128, 512),  # exactly one MXU-aligned block
+        (33, 384, 130, 32, 64, 128),  # everything ragged
+        (7, 128, 2, 8, 2, 64),        # tiny N
+    ],
+)
+def test_lut_gemm_kernel_shapes(m, k, n, bm, bn, bk):
+    key = jax.random.PRNGKey(m * 7 + n)
+    a_idx = jax.random.randint(key, (m, k), 0, 16)
+    w_packed = jax.random.randint(jax.random.PRNGKey(1), (k, n // 2), 0, 256).astype(jnp.uint8)
+    a_book, w_book = _books(2)
+    y = lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(y, ref.lut_gemm_ref(a_idx, w_packed, a_book, w_book),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_lut_gemm_kernel_3bit_activations():
+    """3-bit activation codebook (W4A3, the paper's OASIS-A3 config)."""
+    a_book, w_book = _books(3, n_a=8)
+    a_idx = jax.random.randint(jax.random.PRNGKey(0), (16, 128), 0, 8)
+    w_packed = jax.random.randint(jax.random.PRNGKey(1), (128, 32), 0, 256).astype(jnp.uint8)
+    y = lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_m=8, block_n=32, block_k=64)
+    np.testing.assert_allclose(y, ref.lut_gemm_ref(a_idx, w_packed, a_book, w_book),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_lut_gemm_kernel_rejects_bad_k():
+    a_book, w_book = _books(4)
+    a_idx = jnp.zeros((4, 100), jnp.int32)
+    w_packed = jnp.zeros((100, 8), jnp.uint8)
+    with pytest.raises(ValueError):
+        lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_k=64)
+
+
+def test_ops_lut_gemm_matches_core_and_counting():
+    """Kernel path == factorized jnp == counting-form oracle, with scales."""
+    from repro.core.lut_gemm import lut_gemm as lut_jnp
+    from repro.core.lut_gemm import lut_gemm_counting
+
+    w = jax.random.normal(jax.random.PRNGKey(11), (256, 64))
+    x = jax.random.normal(jax.random.PRNGKey(12), (10, 256))
+    qw = quantize_weight(w, 4)
+    qa = quantize_activation(x, fit_activation_codebook(x, 4))
+    y_kernel = ops.lut_gemm(qa, qw)
+    np.testing.assert_allclose(y_kernel, lut_jnp(qa, qw), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_kernel, lut_gemm_counting(qa, qw), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    kb=st.integers(1, 4),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_gemm_kernel_property(m, kb, n, seed):
+    k = kb * 64
+    key = jax.random.PRNGKey(seed)
+    a_idx = jax.random.randint(key, (m, k), 0, 16)
+    w_packed = jax.random.randint(jax.random.fold_in(key, 1), (k, n), 0, 256).astype(jnp.uint8)
+    a_book, w_book = _books(seed % 1000)
+    y = lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_m=16, block_n=32, block_k=64)
+    np.testing.assert_allclose(y, ref.lut_gemm_ref(a_idx, w_packed, a_book, w_book),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bucketize kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,nbits", [(4, 64, 4), (37, 130, 4), (128, 512, 3), (1, 16, 4)])
+def test_bucketize_kernel(m, k, nbits):
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k)) * 2
+    book = jnp.sort(jax.random.normal(jax.random.PRNGKey(5), (2**nbits,)))
+    b = boundaries_from_centroids(book)
+    got = bucketize_kernel_call(x, b, block_m=16, block_k=64)
+    np.testing.assert_array_equal(got, ref.bucketize_ref(x, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 64), k=st.integers(1, 256))
+def test_bucketize_is_nearest_centroid(seed, m, k):
+    """Property: boundary bucketize == argmin |x - c| (the K-Means assignment)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k)) * 3
+    book = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed + 1), (16,)))
+    got = bucketize_kernel_call(x, boundaries_from_centroids(book))
+    nearest = jnp.argmin(jnp.abs(x[..., None] - book), axis=-1)
+    np.testing.assert_array_equal(got, nearest)
+
+
+# ---------------------------------------------------------------------------
+# topk_outlier kernel (Orizuru)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(1, 64, 5), (13, 64, 5), (32, 128, 9), (5, 16, 8), (8, 4096, 20)])
+def test_topk_kernel_random(m, n, k):
+    x = jax.random.normal(jax.random.PRNGKey(m + n), (m, n))
+    hv, hi, lv, li = topk_outlier_kernel_call(x, k, block_m=4)
+    rhv, rhi, rlv, rli = ref.topk_outlier_ref(x, k)
+    np.testing.assert_array_equal(hv, rhv)
+    np.testing.assert_array_equal(hi, rhi)
+    np.testing.assert_array_equal(lv, rlv)
+    np.testing.assert_array_equal(li, rli)
+
+
+def test_topk_kernel_ties_deterministic():
+    """Heavy ties: integer-valued activations (the paper's ~2%-of-tokens case)."""
+    x = jax.random.randint(jax.random.PRNGKey(7), (13, 64), -5, 6).astype(jnp.float32)
+    hv, hi, lv, li = topk_outlier_kernel_call(x, 6, block_m=4)
+    rhv, rhi, rlv, rli = ref.topk_outlier_ref(x, 6)
+    np.testing.assert_array_equal(hi, rhi)
+    np.testing.assert_array_equal(li, rli)
+
+
+def test_topk_kernel_exhausts_pairs():
+    """k > N/2: some pairs fully popped (both leaves) — tree maintenance must
+    fall back through B to -inf without corrupting order; k > N must raise."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    hv, hi, lv, li = topk_outlier_kernel_call(x, 10, block_m=4)
+    rhv, rhi, rlv, rli = ref.topk_outlier_ref(x, 10)
+    np.testing.assert_array_equal(hi, rhi)
+    np.testing.assert_array_equal(li, rli)
+    with pytest.raises(ValueError):
+        topk_outlier_kernel_call(x, 17, block_m=4)
+
+
+def test_topk_kernel_full_n():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    hv, hi, lv, li = topk_outlier_kernel_call(x, 16, block_m=4)
+    rhv, rhi, rlv, rli = ref.topk_outlier_ref(x, 16)
+    np.testing.assert_array_equal(hi, rhi)
+    np.testing.assert_array_equal(li, rli)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 16), half_n=st.integers(1, 64),
+       data=st.data())
+def test_topk_kernel_property(seed, m, half_n, data):
+    n = 2 * half_n
+    k = data.draw(st.integers(1, n))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    hv, hi, lv, li = topk_outlier_kernel_call(x, k, block_m=8)
+    rhv, rhi, rlv, rli = ref.topk_outlier_ref(x, k)
+    np.testing.assert_array_equal(hi, rhi)
+    np.testing.assert_array_equal(li, rli)
+
+
+def test_ops_topk_matches_core():
+    x = jax.random.normal(jax.random.PRNGKey(12), (6, 10, 64))
+    o = ops.topk_outlier(x, 3)
+    o2 = detect_outliers_topk(x, 3)
+    np.testing.assert_array_equal(o.values, o2.values)
+    np.testing.assert_array_equal(o.channels, o2.channels)

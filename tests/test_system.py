@@ -1,0 +1,174 @@
+"""End-to-end system behaviour tests: training convergence, PTQ quality
+ordering (the paper's Table-III claim in miniature), trainer resume, and the
+dry-run spec machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config, get_smoke_config
+from repro.core.qlinear import QLinearConfig
+from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline
+from repro.models.model import build
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer, loss_fn, make_eval_step
+
+
+@pytest.fixture(scope="module")
+def trained_small_lm():
+    """Train a small byte-LM for a few hundred steps (real text = repo source)."""
+    cfg = get_smoke_config("oasis_7b")
+    model = build(cfg)
+    corpus = ByteCorpus()
+    pipe = TokenPipeline(corpus.tokens, DataConfig(seq_len=48, global_batch=16, seed=0))
+    tc = TrainConfig(optimizer=AdamWConfig(lr=2e-3), microbatches=1,
+                     warmup_steps=20, total_steps=300)
+    trainer = Trainer(model, tc, pipe)
+    trainer.run(300, log_every=10_000, log=lambda *_: None)
+    return cfg, model, trainer.state["params"], pipe, tc
+
+
+def test_training_reduces_loss(trained_small_lm):
+    cfg, model, params, pipe, tc = trained_small_lm
+    eval_step = jax.jit(make_eval_step(model, tc))
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+    loss_trained = float(eval_step(params, batch)["ce"])
+    fresh = model.init(jax.random.PRNGKey(99))
+    loss_fresh = float(eval_step(fresh, batch)["ce"])
+    assert loss_trained < loss_fresh - 1.0, (loss_trained, loss_fresh)
+
+
+def test_ptq_quality_ordering(trained_small_lm):
+    """Paper Table III in miniature: OASIS (K-Means + dynamic outliers)
+    degrades a TRAINED model less than cruder quantization settings."""
+    cfg, model, params, pipe, tc = trained_small_lm
+    eval_step = jax.jit(make_eval_step(model, tc))
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+    ce_fp = float(eval_step(params, batch)["ce"])
+
+    from repro.core.qlinear import use_apply_config
+
+    def ce_with(qcfg):
+        qp = model.quantize(params, qcfg)
+        with use_apply_config(qcfg):
+            step = jax.jit(make_eval_step(model, tc))
+            return float(step(qp, batch)["ce"])
+
+    ce_oasis = ce_with(QLinearConfig(detection="dynamic", outlier_frac=0.01))
+    ce_no_outlier = ce_with(QLinearConfig(detection="none"))
+    ce_a3 = ce_with(QLinearConfig(a_bits=3, detection="dynamic", outlier_frac=0.01))
+
+    assert ce_oasis >= ce_fp - 0.05  # quantization cannot beat fp (tolerance)
+    assert ce_oasis <= ce_no_outlier + 1e-5  # outlier compensation helps
+    assert ce_oasis <= ce_a3 + 0.05  # 4-bit activations >= 3-bit
+    assert ce_oasis - ce_fp < 1.0  # bounded degradation on a trained model
+
+
+def test_trainer_resume_bitexact(tmp_path, trained_small_lm):
+    """kill -9 resume: same final state as an uninterrupted run."""
+    cfg, model, *_ = trained_small_lm
+    corpus = ByteCorpus()
+    mk_pipe = lambda: TokenPipeline(corpus.tokens, DataConfig(seq_len=16, global_batch=4, seed=5))
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3), checkpoint_every=5, total_steps=100)
+
+    t1 = Trainer(model, tc, mk_pipe(), ckpt_dir=str(tmp_path / "a"), seed=1)
+    t1.run(10, log_every=10_000, log=lambda *_: None)
+    w_straight = t1.state["params"]
+
+    t2 = Trainer(model, tc, mk_pipe(), ckpt_dir=str(tmp_path / "b"), seed=1)
+    t2.run(5, log_every=10_000, log=lambda *_: None)
+    # "crash": new trainer object resumes from disk
+    t3 = Trainer(model, tc, mk_pipe(), ckpt_dir=str(tmp_path / "b"), seed=1)
+    assert t3.step == 5
+    t3.run(5, log_every=10_000, log=lambda *_: None)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6),
+        w_straight, t3.state["params"],
+    )
+
+
+def test_loss_fn_adds_moe_aux():
+    cfg = get_smoke_config("granite_moe_3b_a800m")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tc = TrainConfig(aux_weight=0.5, z_loss=0.0)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab_size)}
+    loss, metrics = loss_fn(model, params, batch, tc)
+    assert float(loss) > float(metrics["ce"])  # aux added
+
+
+# ---------------------------------------------------------------------------
+# dry-run spec machinery (single-device checks; the 512-dev run is a launcher)
+# ---------------------------------------------------------------------------
+
+def test_cell_setup_shapes_for_each_kind():
+    from repro.launch.specs import input_specs
+
+    cfg = get_config("llama3_2_1b")
+    for shape_name, cols in [("train_4k", 4097), ("prefill_32k", 32768), ("decode_32k", 1)]:
+        specs = input_specs(cfg, SHAPES[shape_name])
+        assert specs["tokens"].dtype == jnp.int32
+        assert specs["tokens"].shape == (SHAPES[shape_name].global_batch, cols)
+
+
+def test_skip_matrix_matches_design():
+    from repro.launch.specs import skip_reason
+
+    assert skip_reason(get_config("llama3_2_1b"), SHAPES["long_500k"]) is not None
+    assert skip_reason(get_config("falcon_mamba_7b"), SHAPES["long_500k"]) is None
+    assert skip_reason(get_config("h2o_danube_1_8b"), SHAPES["long_500k"]) is None
+    assert skip_reason(get_config("recurrentgemma_2b"), SHAPES["long_500k"]) is None
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert skip_reason(get_config("musicgen_large"), SHAPES[s]) is None
+
+
+def test_param_spec_divisibility_fallbacks():
+    """24-head / 10-head archs must fall back to replicated attention dims on
+    the fixed 16-way model axis rather than producing invalid specs."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.param_sharding import build_param_specs
+
+    for arch in ("granite_moe_3b_a800m", "recurrentgemma_2b"):
+        cfg = get_smoke_config(arch)
+        model = build(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = build_param_specs(params, model_size=16)
+        leaves_p = jax.tree.leaves(params)
+        leaves_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+        for leaf, spec in zip(leaves_p, leaves_s):
+            for dim, axis in zip(leaf.shape, tuple(spec)):
+                if axis == "model":
+                    assert dim % 16 == 0, f"invalid spec {spec} for shape {leaf.shape}"
+
+
+def test_roofline_hlo_analyzer_on_known_graph():
+    """Analyzer ground truth: scanned matmul with known trip count and flops."""
+    from repro.launch.roofline import analyze_hlo
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    hlo = jax.jit(f).lower(w, x).compile().as_text()
+    a = analyze_hlo(hlo)
+    expect = 2 * 8 * 64 * 64 * 6  # 2MNK x 6 scan iterations
+    assert a["dot_flops"] == pytest.approx(expect, rel=0.05), a["dot_flops"]
+    assert 6 in a["while_trip_counts"].values()
+
+
+def test_serve_step_last_only_logits():
+    """Prefill computes logits only for the final position (32k-prefill memory)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab_size)}
+    full = model.apply(params, batch)
+    last = model.apply(params, batch, last_only=True)
+    assert last.logits.shape == (2, 1, cfg.vocab_padded)
+    np.testing.assert_allclose(last.logits[:, 0], full.logits[:, -1], rtol=1e-5, atol=1e-5)
