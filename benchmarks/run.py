@@ -19,6 +19,7 @@ MODULES = [
     "bench_calibration",       # Fig 17
     "bench_offline_online",    # Fig 3 + Fig 5
     "bench_orizuru",           # §IV-D comparison counts
+    "bench_serving",           # paged continuous batching vs seed engine
 ]
 
 

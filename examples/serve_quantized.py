@@ -39,18 +39,26 @@ def main() -> None:
     engine = ServingEngine(
         model,
         qparams,
-        ServeConfig(cache_len=128, qconfig=qcfg, kv_quant=True, cache_dtype="float32"),
+        ServeConfig(cache_len=128, qconfig=qcfg, kv_quant=True, cache_dtype="float32",
+                    block_size=16, prefill_chunk=16),
         batch_slots=4,
     )
     prompts_text = ["def quantize(", "import jax", "class Model", "# The paper",
                     "return x @ w"]
     prompts = [[b for b in t.encode()] for t in prompts_text]
-    print(f"== serving {len(prompts)} byte-level prompts through {engine.slots} slots")
+    print(f"== serving {len(prompts)} byte-level prompts through {engine.slots} slots "
+          f"(paged={engine.paged}: int4 block pool + continuous batching)")
     outs = engine.generate(prompts, max_new_tokens=24)
     for text, toks in zip(prompts_text, outs):
         cont = bytes(t for t in toks if t < 256).decode(errors="replace")
         print(f"   {text!r} -> {cont!r}")
-    print("OK (quantized weights + activations + int4 KV, batched decode)")
+    if engine.paged:
+        st = engine.scheduler.stats
+        print(f"   scheduler: {st['decode_steps']} decode steps, "
+              f"{st['prefill_chunks']} prefill chunks, "
+              f"peak pool occupancy {st['peak_occupancy']:.0%}, "
+              f"{st['preemptions']} preemptions")
+    print("OK (quantized weights + activations + int4 paged KV, continuous batching)")
 
 
 if __name__ == "__main__":

@@ -31,9 +31,34 @@ import threading
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd is an optional dep: fall back to raw (uncompressed) shards
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - depends on container
+    _zstd = None
 
 __all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    return _zstd.ZstdCompressor(level=3).compress(raw) if _zstd else raw
+
+
+def _decompress(blob: bytes, compressed: bool | None = None) -> bytes:
+    """Inverse of _compress. ``compressed`` is the shard's explicit per-leaf
+    flag; legacy shards without it fall back to zstd frame sniffing. Either
+    way raw-stored shards (written where zstd was unavailable) load fine in
+    an env that has it, and vice versa."""
+    if compressed is None:
+        compressed = blob[:4] == _ZSTD_MAGIC
+    if compressed:
+        if _zstd is None:
+            raise ImportError("checkpoint shard is zstd-compressed but the "
+                              "'zstandard' package is not installed")
+        return _zstd.ZstdDecompressor().decompress(blob)
+    return bytes(blob)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -50,9 +75,9 @@ def save_checkpoint(directory: str, step: int, tree, process_index: int = 0,
     tmp = d.parent / f".tmp_step_{step:08d}_{process_index}"
     tmp.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
-    comp = zstandard.ZstdCompressor(level=3)
     payload = {
-        k: {"dtype": str(v.dtype), "shape": list(v.shape), "raw": comp.compress(v.tobytes())}
+        k: {"dtype": str(v.dtype), "shape": list(v.shape), "raw": _compress(v.tobytes()),
+            "z": _zstd is not None}
         for k, v in flat.items()
     }
     shard = tmp / f"shard_{process_index}.msgpack.zst"
@@ -76,14 +101,13 @@ def load_checkpoint(directory: str, step: int, template, verify: bool = True):
     d = pathlib.Path(directory) / f"step_{step:08d}"
     if not (d / "COMMIT").exists():
         raise FileNotFoundError(f"checkpoint {d} has no COMMIT marker (incomplete)")
-    decomp = zstandard.ZstdDecompressor()
     payload: dict = {}
     for shard in sorted(d.glob("shard_*.msgpack.zst")):
         payload.update(msgpack.unpackb(shard.read_bytes(), raw=False))
     if verify and (d / "MANIFEST.json").exists():
         manifest = json.loads((d / "MANIFEST.json").read_text())
         for k, h in manifest["leaves"].items():
-            raw = decomp.decompress(payload[k]["raw"])
+            raw = _decompress(payload[k]["raw"], payload[k].get("z"))
             if hashlib.sha256(raw).hexdigest()[:16] != h:
                 raise IOError(f"checkpoint corruption detected at leaf {k}")
 
@@ -94,7 +118,7 @@ def load_checkpoint(directory: str, step: int, template, verify: bool = True):
         if k not in payload:
             raise KeyError(f"checkpoint missing leaf {k}")
         ent = payload[k]
-        arr = np.frombuffer(decomp.decompress(ent["raw"]), dtype=np.dtype(ent["dtype"]))
+        arr = np.frombuffer(_decompress(ent["raw"], ent.get("z")), dtype=np.dtype(ent["dtype"]))
         leaves.append(arr.reshape(ent["shape"]))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

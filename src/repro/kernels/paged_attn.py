@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: paged-attention gather for continuous-batching decode.
+
+One query token per request attends to its KV blocks through a block table
+(vLLM-style paged KV cache, DESIGN.md §2 serving subsystem). The kernel is
+the decode-side analogue of lut_gemm's no-dequantization property:
+
+  1. the grid is (request, block); the *block table is scalar-prefetched* so
+     each step's BlockSpec index_map DMAs exactly the pool block the request
+     owns — non-resident blocks are never touched,
+  2. int4 K-Means blocks are unpacked (VPU bit ops) and dequantized via the
+     16-way compare-select LUT *in VMEM*; HBM traffic stays bs x kv x hd / 2
+     bytes of indices + scales per block,
+  3. softmax runs online (flash-style) across a request's blocks in f32
+     scratch, so per-step VMEM is one block, not the whole context.
+
+Contract (both variants): q (B, KV, G, hd); block_tables (B, max_blk) int32
+with entries < 0 meaning unallocated (masked out via ctx_lens); ctx_lens (B,)
+valid context length. Output (B, KV, G, hd) f32. Oracles:
+``ref.paged_attn_ref`` / ``ref.paged_attn_quant_ref`` (Sq=1 slice).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lut_gemm import _deq_select
+
+__all__ = ["paged_attn_kernel_call"]
+
+_NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_update(s, v, cl, j, bs, m_ref, l_ref, acc_ref, o_ref, last):
+    """One online-softmax accumulation step over a (bs, KV, hd) value block."""
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(kpos < cl, s, _NEG_INF)
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])  # (KV, G, bs)
+    alpha = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "kgt,tkh->kgh", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(last)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(
+            o_ref.dtype
+        )
+
+
+def _init_scratch(m_ref, l_ref, acc_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, _NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _kernel_bf16(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, bs: int, max_blk: int, softcap: float):
+    _init_scratch(m_ref, l_ref, acc_ref)
+    b, j = pl.program_id(0), pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # (KV, G, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bs, KV, hd)
+    s = jnp.einsum("kgh,tkh->kgt", q, k, preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    _flash_update(s, v_ref[0].astype(jnp.float32), cl_ref[b], j, bs,
+                  m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
+
+
+def _deq_block(idx, scale, book):
+    """(bs, KV, hd//2) packed uint8 + (bs, KV, 1) scale -> (bs, KV, hd) f32."""
+    lo = _deq_select((idx & 0xF).astype(jnp.int32), book, 16)
+    hi = _deq_select((idx >> 4).astype(jnp.int32), book, 16)
+    full = jnp.stack([lo, hi], axis=-1).reshape(*idx.shape[:-1], -1)
+    return full * scale
+
+
+def _kernel_quant(bt_ref, cl_ref, q_ref, ki_ref, ks_ref, vi_ref, vs_ref, book_ref,
+                  o_ref, m_ref, l_ref, acc_ref,
+                  *, bs: int, max_blk: int, softcap: float):
+    _init_scratch(m_ref, l_ref, acc_ref)
+    b, j = pl.program_id(0), pl.program_id(1)
+    book = book_ref[...]
+    q = q_ref[0].astype(jnp.float32)
+    k = _deq_block(ki_ref[0], ks_ref[0], book)  # dequantized in VMEM only
+    s = jnp.einsum("kgh,tkh->kgt", q, k, preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    _flash_update(s, _deq_block(vi_ref[0], vs_ref[0], book), cl_ref[b], j, bs,
+                  m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
+
+
+def paged_attn_kernel_call(
+    q: jax.Array,  # (B, KV, G, hd)
+    *storage: jax.Array,  # (k_pages, v_pages) | (k_idx, k_scale, v_idx, v_scale, book)
+    block_tables: jax.Array,  # (B, max_blk) int32
+    ctx_lens: jax.Array,  # (B,) int32
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token paged decode attention; see module docstring."""
+    b, kv, g, hd = q.shape
+    max_blk = block_tables.shape[1]
+    bs = storage[0].shape[1]
+    quantized = len(storage) == 5
+    if not quantized and len(storage) != 2:
+        raise ValueError(f"expected 2 (bf16) or 5 (int4) storage arrays, got {len(storage)}")
+    n_blocks = storage[0].shape[0]
+    # entries < 0 are unallocated: clamp for the DMA, mask via ctx_lens
+    bt_flat = jnp.clip(block_tables, 0, n_blocks - 1).reshape(-1)
+
+    block_spec = lambda shape: pl.BlockSpec(
+        (1, *shape), lambda bi, j, bt, cl, _mb=max_blk: (bt[bi * _mb + j],) + (0,) * len(shape)
+    )
+    q_spec = pl.BlockSpec((1, kv, g, hd), lambda bi, j, bt, cl: (bi, 0, 0, 0))
+    if quantized:
+        kernel = _kernel_quant
+        in_specs = [
+            q_spec,
+            block_spec((bs, kv, hd // 2)),  # k_idx
+            block_spec((bs, kv, 1)),  # k_scale
+            block_spec((bs, kv, hd // 2)),  # v_idx
+            block_spec((bs, kv, 1)),  # v_scale
+            pl.BlockSpec(storage[4].shape, lambda bi, j, bt, cl: (0,)),  # codebook
+        ]
+    else:
+        kernel = _kernel_bf16
+        in_specs = [q_spec, block_spec((bs, kv, hd)), block_spec((bs, kv, hd))]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, max_blk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, kv, g, hd), lambda bi, j, bt, cl: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),  # running max
+            pltpu.VMEM((kv, g), jnp.float32),  # running denominator
+            pltpu.VMEM((kv, g, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, bs=bs, max_blk=max_blk, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(bt_flat, ctx_lens, q, *storage)

@@ -10,7 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["lut_gemm_ref", "bucketize_ref", "topk_outlier_ref"]
+__all__ = ["lut_gemm_ref", "bucketize_ref", "topk_outlier_ref", "paged_attn_ref",
+           "paged_attn_quant_ref"]
+
+_NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
 def lut_gemm_ref(
@@ -31,6 +34,81 @@ def lut_gemm_ref(
 def bucketize_ref(x: jax.Array, boundaries: jax.Array) -> jax.Array:
     """Cluster assignment via boundaries (paper Clustering Unit): int32."""
     return jnp.searchsorted(boundaries, x, side="right").astype(jnp.int32)
+
+
+def paged_attn_ref(
+    q: jax.Array,  # (B, Sq, KV, G, hd)
+    k_pages: jax.Array,  # (n_blocks, bs, KV, hd)
+    v_pages: jax.Array,  # (n_blocks, bs, KV, hd)
+    block_tables: jax.Array,  # (B, max_blocks_per_seq) int32; < 0 = unallocated
+    ctx_lens: jax.Array,  # (B,) int32 valid context length per request
+    q_pos: jax.Array,  # (B, Sq) int32 absolute query positions
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Paged causal GQA attention oracle: gather K/V blocks through the block
+    table, attend with per-request masks. Token position p of request b lives
+    at ``(block_tables[b, p // bs], p % bs)``; keys at positions
+    ``>= ctx_lens[b]`` or ``> q_pos[b, s]`` are masked. Returns f32, q shape.
+    """
+    n_blocks, bs = k_pages.shape[0], k_pages.shape[1]
+    bt = jnp.clip(block_tables, 0, n_blocks - 1)
+    # (B, max_blk, bs, KV, hd) -> (B, Sk, KV, hd) with Sk = max_blk * bs
+    gk = k_pages[bt].reshape(bt.shape[0], -1, *k_pages.shape[2:])
+    gv = v_pages[bt].reshape(bt.shape[0], -1, *v_pages.shape[2:])
+    k_pos = jnp.arange(gk.shape[1], dtype=jnp.int32)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                   gk.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (k_pos[None, None, :] < ctx_lens[:, None, None]) & (
+        k_pos[None, None, :] <= q_pos[:, :, None]
+    )  # (B, Sq, Sk)
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", p, gv.astype(jnp.float32))
+
+
+def paged_attn_quant_ref(
+    q: jax.Array,  # (B, Sq, KV, G, hd)
+    k_idx: jax.Array,  # (n_blocks, bs, KV, hd//2) uint8, 2 int4 per byte
+    k_scale: jax.Array,  # (n_blocks, bs, KV, 1) f32
+    v_idx: jax.Array,
+    v_scale: jax.Array,
+    codebook: jax.Array,  # (16,) f32 sorted centroids
+    block_tables: jax.Array,
+    ctx_lens: jax.Array,
+    q_pos: jax.Array,
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """int4 variant: gather PACKED blocks, dequantize only the gathered set
+    (codebook lookup x per-token scale) — the dense cache never exists in HBM.
+    """
+    n_blocks = k_idx.shape[0]
+    bt = jnp.clip(block_tables, 0, n_blocks - 1)
+
+    def deq(idx, scale):
+        lo = (idx & 0xF).astype(jnp.int32)
+        hi = (idx >> 4).astype(jnp.int32)
+        full = jnp.stack([lo, hi], axis=-1).reshape(*idx.shape[:-1], -1)
+        return codebook[full] * scale
+
+    gk = deq(k_idx[bt], k_scale[bt]).reshape(bt.shape[0], -1, *k_idx.shape[2:3],
+                                             2 * k_idx.shape[3])
+    gv = deq(v_idx[bt], v_scale[bt]).reshape(gk.shape)
+    k_pos = jnp.arange(gk.shape[1], dtype=jnp.int32)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32), gk) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (k_pos[None, None, :] < ctx_lens[:, None, None]) & (
+        k_pos[None, None, :] <= q_pos[:, :, None]
+    )
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", p, gv)
 
 
 def topk_outlier_ref(x: jax.Array, k: int):

@@ -19,6 +19,7 @@ Conventions
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,7 @@ __all__ = [
     "attention_init",
     "attention_apply",
     "init_kv_cache",
+    "init_paged_kv_cache",
     "mlp_init",
     "mlp_apply",
 ]
@@ -109,13 +111,18 @@ def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """Rotary embedding. x: (B, S, ..., hd); positions: (S,)."""
+    """Rotary embedding. x: (B, S, ..., hd); positions: (S,) or (B, S).
+
+    2-D positions carry a per-request absolute position — the continuous-
+    batching decode path, where every batch row sits at a different point in
+    its own sequence.
+    """
     hd = x.shape[-1]
     half = hd // 2
     freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
-    ang = positions.astype(jnp.float32)[:, None] * freq  # (S, half)
-    # broadcast (S, 1..., half) against x's (B, S, ..., half)
-    ang = ang.reshape(ang.shape[0], *([1] * (x.ndim - 3)), half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    # broadcast ((B,) S, 1..., half) against x's (B, S, ..., half)
+    ang = ang.reshape(*positions.shape, *([1] * (x.ndim - 3)), half)
     sin, cos = jnp.sin(ang), jnp.cos(ang)
     x1, x2 = x[..., :half], x[..., half:]
     xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
@@ -325,6 +332,122 @@ def _cache_read(cache: dict, dtype):
     return cache["k"], cache["v"]
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (block pool + per-request block tables)
+# ---------------------------------------------------------------------------
+
+_USE_PAGED_KERNEL = os.environ.get("REPRO_PAGED_KERNEL", "0") not in ("", "0")
+
+
+def init_paged_kv_cache(cfg, n_blocks: int, block_size: int, dtype,
+                        quantized: bool = False) -> dict:
+    """One attention layer's slice of the global paged block pool.
+
+    Unlike the ring buffer, storage is a pool of ``n_blocks`` fixed-size
+    token blocks shared by all requests; a per-request *block table*
+    (attached per call by the serving scheduler) maps logical block
+    ``pos // block_size`` to a pool slot. Token position ``p`` lives at
+    ``(table[p // block_size], p % block_size)`` — no wraparound, blocks are
+    allocated/freed as sequences grow/finish.
+
+    quantized=True stores K/V as K-Means int4 indices (two per uint8) with a
+    per-(token, head) fp32 scale — same format as the ring cache, kept
+    packed in HBM and only expanded for the blocks a request actually reads.
+    """
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if not quantized:
+        return {
+            "pages_k": jnp.zeros((n_blocks, block_size, kv, hd), dtype),
+            "pages_v": jnp.zeros((n_blocks, block_size, kv, hd), dtype),
+        }
+    from repro.models.model import _default_codebook  # structural codebook
+
+    return {
+        "pages_k_idx": jnp.zeros((n_blocks, block_size, kv, hd // 2), jnp.uint8),
+        "pages_v_idx": jnp.zeros((n_blocks, block_size, kv, hd // 2), jnp.uint8),
+        "pages_k_scale": jnp.zeros((n_blocks, block_size, kv, 1), jnp.float32),
+        "pages_v_scale": jnp.zeros((n_blocks, block_size, kv, 1), jnp.float32),
+        "kv_codebook": _default_codebook(4),
+    }
+
+
+def _paged_write(cache: dict, k, v, positions, ctx_lens):
+    """Scatter this call's tokens into their block slots; returns new cache.
+
+    positions: (B, S) absolute token positions; a token is written iff
+    ``0 <= positions[b, s] < ctx_lens[b]`` and its block-table entry is
+    allocated — padded rows (chunked-prefill tail, idle decode slots) carry
+    positions outside that range and are dropped via an out-of-bounds
+    scatter index, so an idle slot can never corrupt another request's block.
+    """
+    pages = cache["pages_k"] if "pages_k" in cache else cache["pages_k_idx"]
+    n_blocks, bs = pages.shape[0], pages.shape[1]
+    bt = cache["block_tables"]  # (B, max_blocks_per_seq)
+    b, s = positions.shape
+    blk = jnp.clip(positions // bs, 0, bt.shape[1] - 1)
+    block_id = jnp.take_along_axis(bt, blk, axis=1)  # (B, S)
+    valid = (positions >= 0) & (positions < ctx_lens[:, None]) & (block_id >= 0)
+    dest = jnp.where(valid, block_id * bs + positions % bs, n_blocks * bs)
+
+    def scatter(pool, vals):
+        flat = pool.reshape(n_blocks * bs, *pool.shape[2:])
+        flat = flat.at[dest.reshape(-1)].set(
+            vals.reshape(b * s, *vals.shape[2:]), mode="drop"
+        )
+        return flat.reshape(pool.shape)
+
+    if "pages_k_idx" in cache:
+        ki, ks = _kv_quantize(k, cache["kv_codebook"])
+        vi, vs = _kv_quantize(v, cache["kv_codebook"])
+        return cache | {
+            "pages_k_idx": scatter(cache["pages_k_idx"], ki),
+            "pages_v_idx": scatter(cache["pages_v_idx"], vi),
+            "pages_k_scale": scatter(cache["pages_k_scale"], ks),
+            "pages_v_scale": scatter(cache["pages_v_scale"], vs),
+        }
+    return cache | {
+        "pages_k": scatter(cache["pages_k"], k.astype(pages.dtype)),
+        "pages_v": scatter(cache["pages_v"], v.astype(pages.dtype)),
+    }
+
+
+def _paged_attend(cache: dict, q, q_pos, softcap):
+    """Attention against the block pool through the block table.
+
+    q: (B, S, KV, G, hd); q_pos: (B, S). Decode (S == 1) can route through
+    the Pallas gather kernel (REPRO_PAGED_KERNEL=1); the default is the jnp
+    reference, which XLA fuses well and which lowers on any backend.
+    """
+    from repro.kernels import ref as kref
+
+    bt, cl = cache["block_tables"], cache["ctx_lens"]
+    quantized = "pages_k_idx" in cache
+    if _USE_PAGED_KERNEL and q.shape[1] == 1:
+        from repro.kernels.ops import should_interpret
+        from repro.kernels.paged_attn import paged_attn_kernel_call
+
+        if quantized:
+            args = (cache["pages_k_idx"], cache["pages_k_scale"],
+                    cache["pages_v_idx"], cache["pages_v_scale"],
+                    cache["kv_codebook"])
+        else:
+            args = (cache["pages_k"], cache["pages_v"])
+        o = paged_attn_kernel_call(
+            q[:, 0], *args, block_tables=bt, ctx_lens=cl,
+            softcap=softcap, interpret=should_interpret(),
+        )
+        return o[:, None].astype(q.dtype)
+    if quantized:
+        return kref.paged_attn_quant_ref(
+            q, cache["pages_k_idx"], cache["pages_k_scale"],
+            cache["pages_v_idx"], cache["pages_v_scale"], cache["kv_codebook"],
+            bt, cl, q_pos, softcap=softcap,
+        ).astype(q.dtype)
+    return kref.paged_attn_ref(
+        q, cache["pages_k"], cache["pages_v"], bt, cl, q_pos, softcap=softcap
+    ).astype(q.dtype)
+
+
 def attention_apply(
     p,
     x: jax.Array,
@@ -338,12 +461,16 @@ def attention_apply(
 ):
     """GQA attention, all phases (train / prefill / decode / cross).
 
-    Returns (out, new_cache). ``positions`` must be contiguous ascending.
+    Returns (out, new_cache). ``positions`` must be contiguous ascending per
+    batch row: shape (S,) shared across the batch (train / prefill / ring
+    decode), or (B, S) per-request (paged continuous-batching decode, where
+    every row is at a different depth in its own sequence).
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // kv
     softcap = cfg.logit_softcap
+    paged = cache is not None and "block_tables" in cache
 
     q = constrain(dense_apply(p["wq"], x, f"{layer_tag}.q"), "batch", "seq", "heads_flat")
     q = q.reshape(b, s, kv, g, hd)
@@ -374,6 +501,13 @@ def attention_apply(
         k_pos = jnp.zeros((k.shape[1],), jnp.int32)
         o = _attn_dispatch(q, k.astype(q.dtype), v.astype(q.dtype), positions, k_pos,
                            0, False, softcap, cfg)
+    elif paged:
+        if window > 0:
+            raise ValueError("paged KV cache does not support sliding-window "
+                             "attention (windowed archs keep the ring cache)")
+        q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(positions, (b, s))
+        new_cache = _paged_write(cache, k, v, q_pos, cache["ctx_lens"])
+        o = _paged_attend(new_cache, q, q_pos, softcap)
     elif cache is not None:
         new_cache = _cache_write(cache, k, v, positions)
         ck, cv = _cache_read(new_cache, x.dtype)

@@ -58,8 +58,21 @@ class Model:
         return self._mod.init(key, self.cfg)
 
     def init_caches(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
-                    quantized: bool = False):
+                    quantized: bool = False, layout: str = "ring",
+                    block_size: int = 16, n_blocks: int = 0):
+        """layout="ring" (every family) or "paged" (attention-cache families:
+        dense/audio/moe) — a global block pool for the continuous-batching
+        scheduler; see repro.serving.paged_cache."""
+        if layout == "paged":
+            if not self.supports_paged_cache():
+                raise ValueError(f"family {self.cfg.family} has no paged KV cache")
+            return self._mod.init_caches(self.cfg, batch, cache_len, dtype, quantized,
+                                         layout="paged", block_size=block_size,
+                                         n_blocks=n_blocks)
         return self._mod.init_caches(self.cfg, batch, cache_len, dtype, quantized)
+
+    def supports_paged_cache(self) -> bool:
+        return self.cfg.family in ("dense", "audio", "moe") and not self.cfg.sliding_window
 
     def apply(self, params, batch: dict, *, positions=None, caches=None,
               last_only: bool = False, return_hidden_only: bool = False) -> ModelOutput:

@@ -50,13 +50,32 @@ def init(key, cfg: ModelConfig):
 
 
 def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
-                quantized: bool = False):
-    """Stacked (L, ...) ring-buffer KV caches; cache_len should be the window
-    for SWA archs (bounded memory at 500k) and max_seq otherwise.
-    quantized=True -> K-Means int4 KV storage (see layers.init_kv_cache)."""
-    if cfg.sliding_window:
-        cache_len = min(cache_len, cfg.sliding_window)
-    one = lambda: L.init_kv_cache(cfg, batch, cache_len, dtype, quantized)
+                quantized: bool = False, layout: str = "ring",
+                block_size: int = 16, n_blocks: int = 0):
+    """Stacked (L, ...) KV caches.
+
+    layout="ring" (default): dense ring buffer per request slot; cache_len
+    should be the window for SWA archs (bounded memory at 500k) and max_seq
+    otherwise. quantized=True -> K-Means int4 KV storage (see
+    layers.init_kv_cache).
+
+    layout="paged": a global pool of ``n_blocks`` blocks of ``block_size``
+    tokens per layer (layers.init_paged_kv_cache); ``batch``/``cache_len``
+    only size the default pool (``batch * ceil(cache_len / block_size)``
+    blocks when n_blocks=0). The returned tree holds pools ONLY — the
+    serving scheduler attaches per-call ``block_tables``/``ctx_lens``
+    (repro.serving.paged_cache.attach_tables) before model.apply.
+    """
+    if layout == "paged":
+        if cfg.sliding_window:
+            raise ValueError("paged layout requires full attention (no SWA)")
+        if n_blocks <= 0:
+            n_blocks = batch * -(-cache_len // block_size)
+        one = lambda: L.init_paged_kv_cache(cfg, n_blocks, block_size, dtype, quantized)
+    else:
+        if cfg.sliding_window:
+            cache_len = min(cache_len, cfg.sliding_window)
+        one = lambda: L.init_kv_cache(cfg, batch, cache_len, dtype, quantized)
     if cfg.scan_layers:
         return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
     return [one() for _ in range(cfg.n_layers)]
@@ -84,7 +103,8 @@ def _block_apply(p, x, cfg: ModelConfig, positions, cache):
 def _embed_in(params, cfg: ModelConfig, tokens, positions):
     x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.compute_dtype))
     if cfg.pos_embed == "sinusoidal":
-        x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)[None]
+        pe = L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+        x = x + (pe if positions.ndim == 2 else pe[None])  # (B,S,d) | (1,S,d)
     return constrain(x, "batch", "seq_sp", "d_model")
 
 

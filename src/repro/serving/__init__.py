@@ -1,5 +1,20 @@
-"""Quantized serving engine: prefill/decode with batched requests."""
+"""Serving subsystem: paged K-Means KV cache + continuous-batching scheduler.
+
+See serving/README.md for the block layout, scheduler states and int4 format.
+"""
 
 from repro.serving.engine import ServeConfig, ServingEngine, make_prefill_step, make_serve_step
+from repro.serving.paged_cache import BlockAllocator, PagedCacheConfig
+from repro.serving.scheduler import Request, RequestState, Scheduler
 
-__all__ = ["ServeConfig", "ServingEngine", "make_prefill_step", "make_serve_step"]
+__all__ = [
+    "ServeConfig",
+    "ServingEngine",
+    "make_prefill_step",
+    "make_serve_step",
+    "BlockAllocator",
+    "PagedCacheConfig",
+    "Request",
+    "RequestState",
+    "Scheduler",
+]

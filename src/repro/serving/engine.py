@@ -2,13 +2,21 @@
 
 ``make_serve_step``/``make_prefill_step`` build the pure functions the
 multi-pod dry-run lowers (decode = one new token against a ring-buffer KV
-cache of the shape-specified length). ``ServingEngine`` wraps them into a
-batched request loop (greedy or temperature sampling, continuous slot reuse).
+cache of the shape-specified length). ``ServingEngine`` wraps generation:
+
+* attention-cache families (dense/audio/moe, full attention) serve through
+  the **paged continuous-batching scheduler** (serving/scheduler.py) — a
+  global K-Means-quantizable block pool, per-request block tables, chunked
+  prefill, per-step slot refill and preemption-by-eviction. Overflow beyond
+  ``batch_slots`` queues; it is NOT recursively chunked.
+* other families (ssm/hybrid/vlm, SWA archs) fall back to the fixed-slot
+  ring-buffer batcher, iterating slot-sized batches.
 
 The quantization story end-to-end:
   weights    : K-Means W4 (QLinearParams tree)        — paper §III-A
   activations: K-Means A4/A3 per token + outliers     — paper §III-A/C
-  KV cache   : optional K-Means int4 (beyond-paper)   — DESIGN.md §2
+  KV cache   : optional K-Means int4 (beyond-paper)   — DESIGN.md §2,
+               ring buffer AND paged block pool (serving/README.md)
 """
 
 from __future__ import annotations
@@ -27,12 +35,17 @@ __all__ = ["ServeConfig", "make_prefill_step", "make_serve_step", "ServingEngine
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    cache_len: int = 4096
+    cache_len: int = 4096  # max context per request (prompt + generated)
     cache_dtype: str = "bfloat16"
     kv_quant: bool = False
     temperature: float = 0.0  # 0 => greedy
     qconfig: QLinearConfig = QLinearConfig()
     quantized: bool = True  # serve QLinearParams (False = fp baseline)
+    # paged continuous-batching scheduler (attention-cache families)
+    paged: bool = True  # False forces the fixed-slot ring-buffer path
+    block_size: int = 16  # tokens per KV block
+    n_blocks: int = 0  # pool size per layer; 0 -> slots * ceil(cache_len/block_size)
+    prefill_chunk: int = 32  # chunked-prefill token granularity
 
 
 def make_prefill_step(model: Model, sc: ServeConfig) -> Callable:
@@ -51,10 +64,12 @@ def make_prefill_step(model: Model, sc: ServeConfig) -> Callable:
 
 
 def make_serve_step(model: Model, sc: ServeConfig) -> Callable:
-    """serve_step(params, caches, tokens (B,1), pos ()) -> (next (B,), caches).
+    """serve_step(params, caches, tokens (B,1), pos ()) -> (next (B,), caches, logits).
 
     This is the function the decode_32k / long_500k dry-run cells lower:
     one token in, KV cache of the assigned context length, one token out.
+    ``logits`` (B, vocab) are this step's outputs, so temperature sampling
+    draws from the CURRENT distribution (not stale prefill logits).
     """
 
     def serve_step(params, caches, tokens: jax.Array, pos: jax.Array):
@@ -69,37 +84,60 @@ def make_serve_step(model: Model, sc: ServeConfig) -> Callable:
             out = model.apply(params, batch, positions=positions, caches=caches)
         logits = out.logits[:, -1, : model.cfg.vocab_size]
         next_tok = jnp.argmax(logits, axis=-1)
-        return next_tok.astype(jnp.int32), out.caches
+        return next_tok.astype(jnp.int32), out.caches, logits
 
     return serve_step
 
 
 class ServingEngine:
-    """Batched generation over fixed request slots.
+    """Batched generation over ``batch_slots`` request slots.
 
-    Requests are token prompts; the engine right-pads the batch to the slot
-    count, prefill fills the caches, then greedy/temperature decode runs to
-    ``max_new_tokens`` (per-request EOS masking). This is the "serve a small
-    model with batched requests" driver used by examples/serve_quantized.py.
+    Paged-capable models get true continuous batching (see module docstring);
+    the rest get the ring-buffer batcher with iterative (non-recursive)
+    slot-sized chunking. Both paths sample each step from that step's logits.
     """
 
     def __init__(self, model: Model, params, sc: ServeConfig, batch_slots: int = 8):
         self.model, self.sc, self.slots = model, sc, batch_slots
         self.params = params
-        self._prefill = jax.jit(make_prefill_step(model, sc))
-        self._step = jax.jit(make_serve_step(model, sc))
+        self.paged = sc.paged and model.supports_paged_cache()
+        if self.paged:
+            from repro.serving.scheduler import Scheduler
+
+            self.scheduler = Scheduler(model, params, sc, slots=batch_slots)
+        else:
+            self.scheduler = None
+            self._prefill = jax.jit(make_prefill_step(model, sc))
+            self._step = jax.jit(make_serve_step(model, sc))
 
     def generate(
-        self, prompts: list[list[int]], max_new_tokens: int = 32, eos_id: int | None = None,
-        seed: int = 0,
+        self, prompts: list[list[int]], max_new_tokens: int | list[int] = 32,
+        eos_id: int | None = None, seed: int = 0,
     ) -> list[list[int]]:
-        if len(prompts) > self.slots:
-            # simple continuous batching: chunk requests through the slots
-            out: list[list[int]] = []
-            for i in range(0, len(prompts), self.slots):
-                out += self.generate(prompts[i : i + self.slots], max_new_tokens, eos_id, seed)
-            return out
+        """Generate for every prompt; returns per-prompt token lists of
+        exactly its max_new_tokens (eos-padded after early stop).
+        ``max_new_tokens`` may be per-request (paged scheduler path only)."""
+        budgets = (max_new_tokens if isinstance(max_new_tokens, list)
+                   else [max_new_tokens] * len(prompts))
+        if len(budgets) != len(prompts):
+            raise ValueError("per-request max_new_tokens must match prompts")
+        if self.paged:
+            rids = [self.scheduler.submit(p, n, eos_id, seed, salt=i)
+                    for i, (p, n) in enumerate(zip(prompts, budgets))]
+            results = self.scheduler.run()
+            return [results[r] for r in rids]
+        if isinstance(max_new_tokens, list):
+            raise ValueError("per-request budgets need the paged scheduler")
+        out: list[list[int]] = []
+        for i in range(0, len(prompts), self.slots):  # iterative, not recursive
+            out += self._generate_batch(prompts[i : i + self.slots],
+                                        max_new_tokens, eos_id, seed)
+        return out
 
+    def _generate_batch(
+        self, prompts: list[list[int]], max_new_tokens: int, eos_id: int | None,
+        seed: int,
+    ) -> list[list[int]]:
         b = len(prompts)
         plen = max(len(p) for p in prompts)
         toks = jnp.array(
@@ -112,13 +150,21 @@ class ServingEngine:
             **self._img(b)})
         key = jax.random.PRNGKey(seed)
         done = jnp.zeros((b,), bool)
+        if self.sc.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, : self.model.cfg.vocab_size] / self.sc.temperature, axis=-1
+            ).astype(jnp.int32)
         outs = [tok]
         pos = plen
         for _ in range(max_new_tokens - 1):
+            tok, caches, logits = self._step(self.params, caches, tok[:, None],
+                                             jnp.int32(pos))
             if self.sc.temperature > 0:
                 key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits / self.sc.temperature, axis=-1)
-            tok, caches = self._step(self.params, caches, tok[:, None], jnp.int32(pos))
+                tok = jax.random.categorical(
+                    sub, logits / self.sc.temperature, axis=-1
+                ).astype(jnp.int32)
             if eos_id is not None:
                 done = done | (tok == eos_id)
                 tok = jnp.where(done, eos_id, tok)
@@ -127,7 +173,9 @@ class ServingEngine:
             if eos_id is not None and bool(done.all()):
                 break
         gen = jnp.stack(outs, axis=1)
-        return [list(map(int, row)) for row in gen]
+        rows = [list(map(int, row)) for row in gen]
+        pad = eos_id if eos_id is not None else 0
+        return [row + [pad] * (max_new_tokens - len(row)) for row in rows]
 
     def _img(self, b: int) -> dict:
         if self.model.cfg.family != "vlm":

@@ -1,0 +1,106 @@
+"""Paged K-Means KV cache: global block pool + host-side block allocator.
+
+Layout (per attention layer, stacked over L by ``Model.init_caches``):
+
+  bf16 pool : pages_k / pages_v           (n_blocks, block_size, KV, hd)
+  int4 pool : pages_k_idx / pages_v_idx   (n_blocks, block_size, KV, hd//2) u8
+              pages_k_scale / pages_v_scale (n_blocks, block_size, KV, 1) f32
+              kv_codebook                 (16,) f32 sorted K-Means centroids
+
+Token position ``p`` of a request lives at pool slot
+``(block_table[p // block_size], p % block_size)``. Block tables and valid
+context lengths are *per-call* arguments, attached to the pool tree right
+before ``model.apply`` (``attach_tables``) and stripped from the returned
+caches (``detach_tables``) — the pool is the only persistent device state,
+so prefill (batch=1) and batched decode share it functionally.
+
+The allocator is deliberately host-side Python (vLLM-style): block churn is
+a few ints per step and per-request bookkeeping (alloc on growth, free on
+finish/preemption) is control flow the scheduler owns anyway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PagedCacheConfig", "BlockAllocator", "attach_tables", "detach_tables",
+           "blocks_needed"]
+
+_TABLE_KEYS = ("block_tables", "ctx_lens")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Pool geometry. max context per request = block_size * max_blocks_per_seq."""
+
+    block_size: int = 16
+    n_blocks: int = 256  # per-layer pool size (shared by all requests)
+    max_blocks_per_seq: int = 16
+
+    @property
+    def max_context(self) -> int:
+        return self.block_size * self.max_blocks_per_seq
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    return -(-n_tokens // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over the pool's block ids (all layers share ids:
+    logical block b maps to pool slot b in every layer's pool)."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.n_blocks
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n block ids, or None (allocation is all-or-nothing)."""
+        if n <= 0:  # n=0 must NOT slice the whole free list ([-0:] == [:])
+            return []
+        if n > len(self._free):
+            return None
+        got = self._free[-n:][::-1]
+        del self._free[len(self._free) - n:]
+        return got
+
+    def free(self, ids: list[int]) -> None:
+        self._free.extend(reversed(ids))
+
+
+def attach_tables(pools, block_tables: jax.Array, ctx_lens: jax.Array,
+                  n_layers: int, scan_layers: bool):
+    """Pool tree + per-call (B, max_blk)/(B,) tables -> apply-ready caches.
+
+    Under ``scan_layers`` caches are scanned over a leading L axis, so the
+    (identical) tables are broadcast per layer; unscanned models get the same
+    arrays aliased into each layer dict.
+    """
+    bt = block_tables.astype(jnp.int32)
+    cl = ctx_lens.astype(jnp.int32)
+    if scan_layers:
+        extra = {
+            "block_tables": jnp.broadcast_to(bt, (n_layers, *bt.shape)),
+            "ctx_lens": jnp.broadcast_to(cl, (n_layers, *cl.shape)),
+        }
+        return pools | extra
+    return [layer | {"block_tables": bt, "ctx_lens": cl} for layer in pools]
+
+
+def detach_tables(caches):
+    """Inverse of attach_tables: keep only the persistent pool arrays."""
+    if isinstance(caches, list):
+        return [{k: v for k, v in layer.items() if k not in _TABLE_KEYS}
+                for layer in caches]
+    return {k: v for k, v in caches.items() if k not in _TABLE_KEYS}

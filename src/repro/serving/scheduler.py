@@ -1,0 +1,320 @@
+"""Continuous-batching scheduler over the paged K-Means KV cache.
+
+Request lifecycle::
+
+    QUEUED --admit (FCFS, free-block budget)--> RUNNING
+    RUNNING --EOS / max-tokens--> FINISHED      (slot + blocks freed,
+    RUNNING --pool exhausted--> PREEMPTED        refilled next step)
+    PREEMPTED --requeued at the front--> QUEUED  (recompute on re-admission)
+
+The decode hot loop is ONE jitted function of fixed shape (``slots`` rows,
+``max_blocks_per_seq`` table columns): every step all slots decode one token
+against their own block tables; finished slots are refilled from the queue
+between steps, so throughput under mixed-length traffic no longer degrades
+to the slowest request of a chunk. Prefill runs per request in fixed-size
+token chunks (``prefill_chunk``) through a second jitted function — a new
+request only ever costs its own prompt length, not the batch-wide pad.
+
+Preemption is by eviction: when a growing sequence cannot get a block, the
+most recently admitted *other* request is evicted (blocks freed, requeued
+front) and recomputed later — deterministic K-Means assignment makes the
+recomputed KV bit-identical, so preemption never changes tokens.
+
+Sampling happens host-side from logits the step functions return (greedy or
+per-request-keyed temperature) — decode logits, not stale prefill logits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qlinear import use_apply_config
+from repro.serving.paged_cache import (
+    BlockAllocator,
+    PagedCacheConfig,
+    attach_tables,
+    blocks_needed,
+    detach_tables,
+)
+
+__all__ = ["RequestState", "Request", "Scheduler"]
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    eos_id: int | None
+    key: jax.Array  # per-request sampling key (temperature > 0)
+    state: RequestState = RequestState.QUEUED
+    context: list[int] = dataclasses.field(default_factory=list)  # tokens fed
+    generated: list[int] = dataclasses.field(default_factory=list)
+    next_token: int | None = None  # sampled, not yet fed to the model
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return self.eos_id is not None and bool(self.generated) and \
+            self.generated[-1] == self.eos_id
+
+    def output(self) -> list[int]:
+        """Exactly max_new_tokens tokens (eos-padded after early stop)."""
+        out = list(self.generated[: self.max_new_tokens])
+        pad = self.eos_id if self.eos_id is not None else 0
+        return out + [pad] * (self.max_new_tokens - len(out))
+
+
+class Scheduler:
+    """Owns the block pool, the allocator, and the two jitted step functions.
+
+    ``sc`` is a :class:`repro.serving.engine.ServeConfig`; its ``cache_len``
+    bounds per-request context (prompt + generated), ``block_size`` /
+    ``n_blocks`` size the pool (n_blocks=0 -> slots * blocks-per-request, a
+    no-preemption default; pass a smaller pool to exercise preemption).
+    """
+
+    def __init__(self, model, params, sc, slots: int = 8):
+        if not model.supports_paged_cache():
+            raise ValueError(f"family {model.cfg.family} cannot use the paged scheduler")
+        self.model, self.params, self.sc, self.slots = model, params, sc, slots
+        max_blk = blocks_needed(sc.cache_len, sc.block_size)
+        n_blocks = sc.n_blocks or slots * max_blk
+        self.pcfg = PagedCacheConfig(block_size=sc.block_size, n_blocks=n_blocks,
+                                     max_blocks_per_seq=max_blk)
+        self.pools = model.init_caches(
+            slots, sc.cache_len, jnp.dtype(sc.cache_dtype), quantized=sc.kv_quant,
+            layout="paged", block_size=sc.block_size, n_blocks=n_blocks,
+        )
+        self.allocator = BlockAllocator(n_blocks)
+        self._queue: deque[Request] = deque()
+        self._running: list[Request] = []
+        self._slot_free = list(range(slots - 1, -1, -1))
+        self._next_rid = 0
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0, "preemptions": 0,
+                      "peak_occupancy": 0.0, "decode_slot_tokens": 0}
+        self._prefill_fn = jax.jit(self._make_prefill_chunk())
+        self._decode_fn = jax.jit(self._make_decode_step())
+
+    # ------------------------------------------------------------------ jit
+    def _attach(self, bt, cl):
+        return attach_tables(self.pools, bt, cl, self.model.cfg.n_layers,
+                             self.model.cfg.scan_layers)
+
+    def _make_prefill_chunk(self):
+        model, sc, chunk = self.model, self.sc, self.sc.prefill_chunk
+
+        def prefill_chunk(params, pools, bt, tokens, start, plen):
+            """tokens (1, chunk) zero-padded; writes positions
+            [start, min(start+chunk, plen)); returns logits at row plen-1
+            (garbage unless this chunk contains it)."""
+            positions = start + jnp.arange(chunk, dtype=jnp.int32)
+            ctx = jnp.minimum(start + chunk, plen)[None]
+            caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
+                                   model.cfg.scan_layers)
+            with use_apply_config(sc.qconfig):
+                out = model.apply(params, {"tokens": tokens},
+                                  positions=positions, caches=caches)
+            logits = out.logits[0, jnp.clip(plen - 1 - start, 0, chunk - 1)]
+            return detach_tables(out.caches), logits[: model.cfg.vocab_size]
+
+        return prefill_chunk
+
+    def _make_decode_step(self):
+        model, sc = self.model, self.sc
+
+        def decode_step(params, pools, bt, ctx_lens, tokens):
+            """One token for every slot. ctx_lens counts the incoming token
+            (0 = idle slot: nothing is written or read for that row)."""
+            positions = (ctx_lens - 1)[:, None]
+            caches = attach_tables(pools, bt, ctx_lens, model.cfg.n_layers,
+                                   model.cfg.scan_layers)
+            with use_apply_config(sc.qconfig):
+                out = model.apply(params, {"tokens": tokens},
+                                  positions=positions, caches=caches)
+            return detach_tables(out.caches), out.logits[:, -1, : model.cfg.vocab_size]
+
+        return decode_step
+
+    # ----------------------------------------------------------------- host
+    def submit(self, prompt: list[int], max_new_tokens: int,
+               eos_id: int | None = None, seed: int = 0,
+               salt: int | None = None) -> int:
+        """``salt`` individualizes the sampling key within one batch of
+        submissions (the engine passes the request's index) so a given
+        (seed, request set) resamples identically across generate calls."""
+        if not prompt:
+            raise ValueError("empty prompt (nothing to prefill)")
+        if len(prompt) + max_new_tokens > self.pcfg.max_context:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
+                f"cache_len {self.pcfg.max_context}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        r = Request(rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
+                    eos_id=eos_id,
+                    key=jax.random.PRNGKey(seed * 100_003 + (rid if salt is None else salt)),
+                    context=list(prompt))
+        self._queue.append(r)
+        return rid
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain queue + running set; returns {rid: generated tokens}."""
+        results: dict[int, list[int]] = {}
+        while self.step(results):
+            pass
+        return results
+
+    def step(self, results: dict[int, list[int]]) -> bool:
+        """One scheduler iteration: refill slots from the queue, retire
+        finished requests, decode one token for every running slot. Finished
+        outputs are added to ``results``. Returns True while work remains —
+        online drivers (bench_serving) interleave ``submit`` between steps.
+        """
+        admitted = self._refill_slots()
+        for r in [r for r in self._running if r.done]:
+            self._finish(r, results)
+        if self._running:
+            self._decode_once(results)
+            return True
+        if self._queue and not admitted:  # head can never fit: whole pool is free
+            r = self._queue[0]
+            raise RuntimeError(
+                f"request {r.rid} needs {blocks_needed(len(r.context), self.pcfg.block_size)}"
+                f" blocks; pool has {self.allocator.n_free}/{self.pcfg.n_blocks} free"
+            )
+        return bool(self._queue)
+
+    # ------------------------------------------------------- admission/prefill
+    def _refill_slots(self) -> int:
+        """FCFS admission: head of queue enters iff a slot is free and the
+        pool can hold its full current context. Returns #admitted."""
+        admitted = 0
+        while self._queue and self._slot_free:
+            r = self._queue[0]
+            blocks = self.allocator.alloc(blocks_needed(len(r.context),
+                                                        self.pcfg.block_size))
+            if blocks is None:
+                break
+            self._queue.popleft()
+            r.blocks, r.slot, r.state = blocks, self._slot_free.pop(), RequestState.RUNNING
+            self._running.append(r)
+            self._prefill(r)
+            admitted += 1
+        self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
+                                           self.allocator.occupancy)
+        return admitted
+
+    def _prefill(self, r: Request) -> None:
+        """Chunked prefill of r.context into r.blocks; samples the first
+        token from the REAL last-position logits unless the request is a
+        re-admitted preemption (its next_token is already decided)."""
+        chunk = self.sc.prefill_chunk
+        plen = len(r.context)
+        toks = np.zeros((1, -(-plen // chunk) * chunk), np.int32)
+        toks[0, :plen] = r.context
+        bt = self._bt_row(r)[None]
+        logits = None
+        for start in range(0, plen, chunk):
+            self.pools, logits = self._prefill_fn(
+                self.params, self.pools, bt, jnp.asarray(toks[:, start:start + chunk]),
+                jnp.int32(start), jnp.int32(plen),
+            )
+            self.stats["prefill_chunks"] += 1
+        if r.next_token is None:
+            r.next_token = self._sample(logits, r)
+            r.generated.append(r.next_token)
+
+    # ---------------------------------------------------------------- decode
+    def _decode_once(self, results: dict) -> None:
+        for r in list(self._running):
+            if r.state is RequestState.RUNNING:  # not preempted by an earlier _grow
+                self._grow(r)
+        if not self._running:
+            return
+        bt = np.full((self.slots, self.pcfg.max_blocks_per_seq), -1, np.int32)
+        cl = np.zeros((self.slots,), np.int32)
+        tk = np.zeros((self.slots, 1), np.int32)
+        for r in self._running:
+            bt[r.slot] = self._bt_row(r)
+            cl[r.slot] = len(r.context) + 1  # incoming token included
+            tk[r.slot, 0] = r.next_token
+        self.pools, logits = self._decode_fn(
+            self.params, self.pools, jnp.asarray(bt), jnp.asarray(cl), jnp.asarray(tk)
+        )
+        self.stats["decode_steps"] += 1
+        self.stats["decode_slot_tokens"] += len(self._running)
+        for r in self._running:
+            r.context.append(r.next_token)
+            r.next_token = self._sample(logits[r.slot], r)
+            r.generated.append(r.next_token)
+        for r in [r for r in self._running if r.done]:
+            self._finish(r, results)
+
+    def _grow(self, r: Request) -> None:
+        """Guarantee a block for position len(r.context) (the token about to
+        be written), evicting the youngest other request if the pool is dry."""
+        if blocks_needed(len(r.context) + 1, self.pcfg.block_size) <= len(r.blocks):
+            return
+        while True:
+            got = self.allocator.alloc(1)
+            if got is not None:
+                r.blocks.extend(got)
+                self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
+                                                   self.allocator.occupancy)
+                return
+            victims = [v for v in self._running if v is not r]
+            if not victims:
+                raise RuntimeError(
+                    f"request {r.rid} cannot grow: pool of {self.pcfg.n_blocks} "
+                    "blocks is exhausted and there is nothing left to preempt"
+                )
+            self._preempt(victims[-1])
+
+    def _preempt(self, r: Request) -> None:
+        self.allocator.free(r.blocks)
+        r.blocks = []
+        self._slot_free.append(r.slot)
+        r.slot = -1
+        r.state = RequestState.PREEMPTED
+        self._running.remove(r)
+        self._queue.appendleft(r)  # front: preserves FCFS completion order
+        self.stats["preemptions"] += 1
+
+    def _finish(self, r: Request, results: dict) -> None:
+        self.allocator.free(r.blocks)
+        r.blocks = []
+        self._slot_free.append(r.slot)
+        r.slot = -1
+        r.state = RequestState.FINISHED
+        self._running.remove(r)
+        results[r.rid] = r.output()
+
+    # ----------------------------------------------------------------- misc
+    def _bt_row(self, r: Request) -> np.ndarray:
+        row = np.full((self.pcfg.max_blocks_per_seq,), -1, np.int32)
+        row[: len(r.blocks)] = r.blocks
+        return row
+
+    def _sample(self, logits: jax.Array, r: Request) -> int:
+        if self.sc.temperature > 0:
+            r.key, sub = jax.random.split(r.key)
+            return int(jax.random.categorical(sub, logits / self.sc.temperature))
+        return int(jnp.argmax(logits))
