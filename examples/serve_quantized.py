@@ -54,8 +54,9 @@ def main() -> None:
         print(f"   {text!r} -> {cont!r}")
     if engine.paged:
         st = engine.scheduler.stats
-        print(f"   scheduler: {st['decode_steps']} decode steps, "
-              f"{st['prefill_chunks']} prefill chunks, "
+        print(f"   scheduler: {st['packed_steps']} packed steps "
+              f"({st['mixed_steps']} mixed prefill+decode), "
+              f"{st['prefill_tokens']} prefill tokens in {st['prefill_chunks']} segments, "
               f"peak pool occupancy {st['peak_occupancy']:.0%}, "
               f"{st['preemptions']} preemptions")
     print("OK (quantized weights + activations + int4 paged KV, continuous batching)")

@@ -1,22 +1,28 @@
-"""Pallas TPU kernel: paged-attention gather for continuous-batching decode.
+"""Pallas TPU kernel: paged-attention gather for continuous-batching serving.
 
-One query token per request attends to its KV blocks through a block table
-(vLLM-style paged KV cache, DESIGN.md §2 serving subsystem). The kernel is
-the decode-side analogue of lut_gemm's no-dequantization property:
+A query *segment* per sequence attends to that sequence's KV blocks through a
+block table (vLLM-style paged KV cache, DESIGN.md §2 serving subsystem). The
+segment generalizes the original 1-token decode contract: decode is S == 1,
+a chunked-prefill slice is S == chunk, and the packed token-budget step runs
+B == token_budget rows of S == 1 (each row is one token with its own table).
+The kernel is the decode-side analogue of lut_gemm's no-dequantization
+property:
 
-  1. the grid is (request, block); the *block table is scalar-prefetched* so
-     each step's BlockSpec index_map DMAs exactly the pool block the request
+  1. the grid is (sequence, block); the *block table is scalar-prefetched* so
+     each step's BlockSpec index_map DMAs exactly the pool block the sequence
      owns — non-resident blocks are never touched,
   2. int4 K-Means blocks are unpacked (VPU bit ops) and dequantized via the
      16-way compare-select LUT *in VMEM*; HBM traffic stays bs x kv x hd / 2
      bytes of indices + scales per block,
-  3. softmax runs online (flash-style) across a request's blocks in f32
-     scratch, so per-step VMEM is one block, not the whole context.
+  3. softmax runs online (flash-style) across a sequence's blocks in f32
+     scratch, so per-step VMEM is one block x one segment, not the whole
+     context.
 
-Contract (both variants): q (B, KV, G, hd); block_tables (B, max_blk) int32
-with entries < 0 meaning unallocated (masked out via ctx_lens); ctx_lens (B,)
-valid context length. Output (B, KV, G, hd) f32. Oracles:
-``ref.paged_attn_ref`` / ``ref.paged_attn_quant_ref`` (Sq=1 slice).
+Contract (both variants): q (B, S, KV, G, hd); q_pos (B, S) int32 absolute
+query positions (< 0 = padded row, fully masked); block_tables (B, max_blk)
+int32 with entries < 0 meaning unallocated (masked out via ctx_lens);
+ctx_lens (B,) valid context length. Output (B, S, KV, G, hd) f32. Oracles:
+``ref.paged_attn_ref`` / ``ref.paged_attn_quant_ref`` (same layout).
 """
 
 from __future__ import annotations
@@ -35,24 +41,25 @@ __all__ = ["paged_attn_kernel_call"]
 _NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
-def _flash_update(s, v, cl, j, bs, m_ref, l_ref, acc_ref, o_ref, last):
-    """One online-softmax accumulation step over a (bs, KV, hd) value block."""
-    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
-    s = jnp.where(kpos < cl, s, _NEG_INF)
+def _flash_update(s, v, cl, qp, j, bs, m_ref, l_ref, acc_ref, o_ref, last):
+    """One online-softmax step over a (bs, KV, hd) value block for a whole
+    query segment. s: (KV, G, S, bs) scores; qp: (S,) absolute positions."""
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+    valid = (kpos < cl) & (kpos <= qp[None, None, :, None])
+    s = jnp.where(valid, s, _NEG_INF)
     m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[..., None])  # (KV, G, bs)
+    p = jnp.exp(s - m_new[..., None])  # (KV, G, S, bs)
     alpha = jnp.exp(m_ref[...] - m_new)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
-        "kgt,tkh->kgh", p, v, preferred_element_type=jnp.float32
+        "kgst,tkh->kgsh", p, v, preferred_element_type=jnp.float32
     )
     m_ref[...] = m_new
 
     @pl.when(last)
     def _done():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(
-            o_ref.dtype
-        )
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]  # (KV,G,S,hd)
+        o_ref[0] = o.transpose(2, 0, 1, 3).astype(o_ref.dtype)  # (S,KV,G,hd)
 
 
 def _init_scratch(m_ref, l_ref, acc_ref):
@@ -63,17 +70,17 @@ def _init_scratch(m_ref, l_ref, acc_ref):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
 
-def _kernel_bf16(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                 *, bs: int, max_blk: int, softcap: float):
+def _kernel_bf16(bt_ref, cl_ref, qp_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, bs: int, max_blk: int, softcap: float):
     _init_scratch(m_ref, l_ref, acc_ref)
     b, j = pl.program_id(0), pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32)  # (KV, G, hd)
+    q = q_ref[0].astype(jnp.float32)  # (S, KV, G, hd)
     k = k_ref[0].astype(jnp.float32)  # (bs, KV, hd)
-    s = jnp.einsum("kgh,tkh->kgt", q, k, preferred_element_type=jnp.float32)
+    s = jnp.einsum("skgh,tkh->kgst", q, k, preferred_element_type=jnp.float32)
     s = s * (q.shape[-1] ** -0.5)
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
-    _flash_update(s, v_ref[0].astype(jnp.float32), cl_ref[b], j, bs,
+    _flash_update(s, v_ref[0].astype(jnp.float32), cl_ref[b], qp_ref[0], j, bs,
                   m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
 
 
@@ -85,48 +92,51 @@ def _deq_block(idx, scale, book):
     return full * scale
 
 
-def _kernel_quant(bt_ref, cl_ref, q_ref, ki_ref, ks_ref, vi_ref, vs_ref, book_ref,
-                  o_ref, m_ref, l_ref, acc_ref,
+def _kernel_quant(bt_ref, cl_ref, qp_ref, q_ref, ki_ref, ks_ref, vi_ref, vs_ref,
+                  book_ref, o_ref, m_ref, l_ref, acc_ref,
                   *, bs: int, max_blk: int, softcap: float):
     _init_scratch(m_ref, l_ref, acc_ref)
     b, j = pl.program_id(0), pl.program_id(1)
     book = book_ref[...]
-    q = q_ref[0].astype(jnp.float32)
+    q = q_ref[0].astype(jnp.float32)  # (S, KV, G, hd)
     k = _deq_block(ki_ref[0], ks_ref[0], book)  # dequantized in VMEM only
-    s = jnp.einsum("kgh,tkh->kgt", q, k, preferred_element_type=jnp.float32)
+    s = jnp.einsum("skgh,tkh->kgst", q, k, preferred_element_type=jnp.float32)
     s = s * (q.shape[-1] ** -0.5)
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
-    _flash_update(s, _deq_block(vi_ref[0], vs_ref[0], book), cl_ref[b], j, bs,
-                  m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
+    _flash_update(s, _deq_block(vi_ref[0], vs_ref[0], book), cl_ref[b], qp_ref[0],
+                  j, bs, m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
 
 
 def paged_attn_kernel_call(
-    q: jax.Array,  # (B, KV, G, hd)
+    q: jax.Array,  # (B, S, KV, G, hd) — a query segment per sequence
     *storage: jax.Array,  # (k_pages, v_pages) | (k_idx, k_scale, v_idx, v_scale, book)
     block_tables: jax.Array,  # (B, max_blk) int32
     ctx_lens: jax.Array,  # (B,) int32
+    q_pos: jax.Array,  # (B, S) int32 absolute positions; < 0 = padded row
     softcap: float = 0.0,
     interpret: bool = True,
 ) -> jax.Array:
-    """Single-token paged decode attention; see module docstring."""
-    b, kv, g, hd = q.shape
+    """Segmented paged decode/prefill attention; see module docstring."""
+    b, sq, kv, g, hd = q.shape
     max_blk = block_tables.shape[1]
     bs = storage[0].shape[1]
     quantized = len(storage) == 5
     if not quantized and len(storage) != 2:
         raise ValueError(f"expected 2 (bf16) or 5 (int4) storage arrays, got {len(storage)}")
     n_blocks = storage[0].shape[0]
-    # entries < 0 are unallocated: clamp for the DMA, mask via ctx_lens
+    # entries < 0 are unallocated: clamp for the DMA, mask via ctx_lens/q_pos
     bt_flat = jnp.clip(block_tables, 0, n_blocks - 1).reshape(-1)
 
     block_spec = lambda shape: pl.BlockSpec(
         (1, *shape), lambda bi, j, bt, cl, _mb=max_blk: (bt[bi * _mb + j],) + (0,) * len(shape)
     )
-    q_spec = pl.BlockSpec((1, kv, g, hd), lambda bi, j, bt, cl: (bi, 0, 0, 0))
+    qp_spec = pl.BlockSpec((1, sq), lambda bi, j, bt, cl: (bi, 0))
+    q_spec = pl.BlockSpec((1, sq, kv, g, hd), lambda bi, j, bt, cl: (bi, 0, 0, 0, 0))
     if quantized:
         kernel = _kernel_quant
         in_specs = [
+            qp_spec,
             q_spec,
             block_spec((bs, kv, hd // 2)),  # k_idx
             block_spec((bs, kv, 1)),  # k_scale
@@ -136,22 +146,23 @@ def paged_attn_kernel_call(
         ]
     else:
         kernel = _kernel_bf16
-        in_specs = [q_spec, block_spec((bs, kv, hd)), block_spec((bs, kv, hd))]
+        in_specs = [qp_spec, q_spec, block_spec((bs, kv, hd)), block_spec((bs, kv, hd))]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, max_blk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, kv, g, hd), lambda bi, j, bt, cl: (bi, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, sq, kv, g, hd),
+                               lambda bi, j, bt, cl: (bi, 0, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((kv, g), jnp.float32),  # running max
-            pltpu.VMEM((kv, g), jnp.float32),  # running denominator
-            pltpu.VMEM((kv, g, hd), jnp.float32),  # output accumulator
+            pltpu.VMEM((kv, g, sq), jnp.float32),  # running max
+            pltpu.VMEM((kv, g, sq), jnp.float32),  # running denominator
+            pltpu.VMEM((kv, g, sq, hd), jnp.float32),  # output accumulator
         ],
     )
     return pl.pallas_call(
         functools.partial(kernel, bs=bs, max_blk=max_blk, softcap=softcap),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, sq, kv, g, hd), jnp.float32),
         interpret=interpret,
-    )(bt_flat, ctx_lens, q, *storage)
+    )(bt_flat, ctx_lens, q_pos.astype(jnp.int32), q, *storage)

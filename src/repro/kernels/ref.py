@@ -42,14 +42,18 @@ def paged_attn_ref(
     v_pages: jax.Array,  # (n_blocks, bs, KV, hd)
     block_tables: jax.Array,  # (B, max_blocks_per_seq) int32; < 0 = unallocated
     ctx_lens: jax.Array,  # (B,) int32 valid context length per request
-    q_pos: jax.Array,  # (B, Sq) int32 absolute query positions
+    q_pos: jax.Array,  # (B, Sq) int32 absolute query positions (< 0 = padded)
     *,
     softcap: float = 0.0,
 ) -> jax.Array:
     """Paged causal GQA attention oracle: gather K/V blocks through the block
-    table, attend with per-request masks. Token position p of request b lives
-    at ``(block_tables[b, p // bs], p % bs)``; keys at positions
-    ``>= ctx_lens[b]`` or ``> q_pos[b, s]`` are masked. Returns f32, q shape.
+    table, attend with per-request masks. ``Sq`` is a query *segment* per
+    sequence (decode: 1; chunked prefill: chunk; packed token-budget step:
+    B = n_tokens rows of Sq = 1). Token position p of request b lives at
+    ``(block_tables[b, p // bs], p % bs)``; keys at positions
+    ``>= ctx_lens[b]`` or ``> q_pos[b, s]`` are masked, so a padded query row
+    (q_pos < 0) sees no keys and returns garbage to be discarded by the
+    caller. Returns f32, q shape.
     """
     n_blocks, bs = k_pages.shape[0], k_pages.shape[1]
     bt = jnp.clip(block_tables, 0, n_blocks - 1)

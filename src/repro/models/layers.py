@@ -157,20 +157,33 @@ def _mask(q_pos, k_pos, window: int, causal: bool):
     return valid
 
 
-def _sdpa_dense(q, k, v, q_pos, k_pos, window, causal, softcap):
+def _mask_scores(s, msk, k_pos, k_min):
+    """Apply an (Sq, Sk) mask to scores s (B, KV, G, Sq, Sk).
+
+    ``k_min`` (B,) optionally also masks keys at positions < k_min[b] per
+    batch row — the left-pad exclusion for the fixed-slot fallback engine,
+    where a short prompt's pad tokens occupy cache positions [0, pad_len).
+    """
+    if k_min is not None:
+        mb = msk[None] & (k_pos[None, None, :] >= k_min[:, None, None])  # (B,Sq,Sk)
+        return jnp.where(mb[:, None, None], s, _NEG_INF)
+    return jnp.where(msk[None, None, None], s, _NEG_INF)
+
+
+def _sdpa_dense(q, k, v, q_pos, k_pos, window, causal, softcap, k_min=None):
     """q: (B,Sq,KV,G,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,KV,G,hd)."""
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
-    m = _mask(q_pos, k_pos, window, causal)
-    s = jnp.where(m[None, None, None], s, _NEG_INF)
+    s = _mask_scores(s, _mask(q_pos, k_pos, window, causal), k_pos, k_min)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
 
 
-def _sdpa_flash(q, k, v, q_pos, k_pos, window, causal, softcap, q_chunk, k_chunk):
+def _sdpa_flash(q, k, v, q_pos, k_pos, window, causal, softcap, q_chunk, k_chunk,
+                k_min=None):
     """Flash-style online-softmax attention: nested scan over q/k chunks.
 
     Peak scores buffer is (B, KV, G, q_chunk, k_chunk) instead of (.., Sq, Sk)
@@ -206,8 +219,7 @@ def _sdpa_flash(q, k, v, q_pos, k_pos, window, causal, softcap, q_chunk, k_chunk
             s = jnp.einsum("bskgh,btkh->bkgst", qf, kc.astype(jnp.float32)) * scale
             if softcap > 0:
                 s = softcap * jnp.tanh(s / softcap)
-            msk = _mask(qp, kp, window, causal)
-            s = jnp.where(msk[None, None, None], s, _NEG_INF)
+            s = _mask_scores(s, _mask(qp, kp, window, causal), kp, k_min)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
@@ -336,7 +348,31 @@ def _cache_read(cache: dict, dtype):
 # paged KV cache (block pool + per-request block tables)
 # ---------------------------------------------------------------------------
 
-_USE_PAGED_KERNEL = os.environ.get("REPRO_PAGED_KERNEL", "0") not in ("", "0")
+def _paged_kernel_default() -> bool:
+    """REPRO_PAGED_KERNEL routing: opt-OUT on TPU, opt-in elsewhere.
+
+    unset / "auto" -> kernel on TPU backends, jnp gather everywhere else
+    (interpret-mode Pallas is far slower than XLA's fused gather on CPU);
+    "0"/"off"/"false" -> always jnp; anything else -> always kernel.
+    """
+    env = os.environ.get("REPRO_PAGED_KERNEL", "auto").strip().lower()
+    if env in ("", "auto"):
+        return jax.default_backend() == "tpu"
+    return env not in ("0", "off", "false")
+
+
+# resolved on first paged-attention call, NOT at import: jax.default_backend()
+# initializes the backend, which would break jax.distributed.initialize() /
+# platform overrides in any program that merely imports the model stack.
+# Tests monkeypatch this to force a route.
+_USE_PAGED_KERNEL: bool | None = None
+
+
+def _paged_kernel_enabled() -> bool:
+    global _USE_PAGED_KERNEL
+    if _USE_PAGED_KERNEL is None:
+        _USE_PAGED_KERNEL = _paged_kernel_default()
+    return _USE_PAGED_KERNEL
 
 
 def init_paged_kv_cache(cfg, n_blocks: int, block_size: int, dtype,
@@ -414,15 +450,18 @@ def _paged_write(cache: dict, k, v, positions, ctx_lens):
 def _paged_attend(cache: dict, q, q_pos, softcap):
     """Attention against the block pool through the block table.
 
-    q: (B, S, KV, G, hd); q_pos: (B, S). Decode (S == 1) can route through
-    the Pallas gather kernel (REPRO_PAGED_KERNEL=1); the default is the jnp
-    reference, which XLA fuses well and which lowers on any backend.
+    q: (B, S, KV, G, hd); q_pos: (B, S). Every batch row is a query *segment*
+    of one sequence (decode: S == 1; chunked prefill: S == chunk; the packed
+    token-budget step: B == n_tokens rows of S == 1). On TPU backends the
+    Pallas gather kernel is the default route (REPRO_PAGED_KERNEL=0 opts
+    out); elsewhere the jnp reference is used, which XLA fuses well and
+    which lowers on any backend.
     """
     from repro.kernels import ref as kref
 
     bt, cl = cache["block_tables"], cache["ctx_lens"]
     quantized = "pages_k_idx" in cache
-    if _USE_PAGED_KERNEL and q.shape[1] == 1:
+    if _paged_kernel_enabled():
         from repro.kernels.ops import should_interpret
         from repro.kernels.paged_attn import paged_attn_kernel_call
 
@@ -433,10 +472,10 @@ def _paged_attend(cache: dict, q, q_pos, softcap):
         else:
             args = (cache["pages_k"], cache["pages_v"])
         o = paged_attn_kernel_call(
-            q[:, 0], *args, block_tables=bt, ctx_lens=cl,
+            q, *args, block_tables=bt, ctx_lens=cl, q_pos=q_pos,
             softcap=softcap, interpret=should_interpret(),
         )
-        return o[:, None].astype(q.dtype)
+        return o.astype(q.dtype)
     if quantized:
         return kref.paged_attn_quant_ref(
             q, cache["pages_k_idx"], cache["pages_k_scale"],
@@ -463,8 +502,15 @@ def attention_apply(
 
     Returns (out, new_cache). ``positions`` must be contiguous ascending per
     batch row: shape (S,) shared across the batch (train / prefill / ring
-    decode), or (B, S) per-request (paged continuous-batching decode, where
-    every row is at a different depth in its own sequence).
+    decode), or (B, S) per-request (paged continuous-batching, where every
+    row is at a different depth in its own sequence; position -1 marks a
+    padded row that is neither written nor attended).
+
+    Paged caches may carry ``token_slots`` (B,) — the packed token-budget
+    layout, where ``block_tables``/ ``ctx_lens`` are per *slot* and each
+    batch row is one token of slot ``token_slots[b]``; the per-row table is
+    gathered device-side. Ring caches may carry ``pad_len`` (B,) — keys at
+    positions < pad_len[b] (a left-padded prompt's pad tokens) are masked.
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -505,6 +551,13 @@ def attention_apply(
         if window > 0:
             raise ValueError("paged KV cache does not support sliding-window "
                              "attention (windowed archs keep the ring cache)")
+        if "token_slots" in cache:
+            # packed layout: per-slot tables, one token per row — gather the
+            # per-row table on device (host ships slots*max_blk ints, not T*)
+            cache = cache | {
+                "block_tables": jnp.take(cache["block_tables"],
+                                         cache["token_slots"], axis=0)
+            }
         q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(positions, (b, s))
         new_cache = _paged_write(cache, k, v, q_pos, cache["ctx_lens"])
         o = _paged_attend(new_cache, q, q_pos, softcap)
@@ -512,7 +565,8 @@ def attention_apply(
         new_cache = _cache_write(cache, k, v, positions)
         ck, cv = _cache_read(new_cache, x.dtype)
         o = _attn_dispatch(
-            q, ck, cv, positions, new_cache["slot_pos"], window, True, softcap, cfg
+            q, ck, cv, positions, new_cache["slot_pos"], window, True, softcap, cfg,
+            k_min=cache.get("pad_len"),
         )
     else:
         k_pos = positions
@@ -525,14 +579,14 @@ def attention_apply(
     return out, new_cache
 
 
-def _attn_dispatch(q, k, v, q_pos, k_pos, window, causal, softcap, cfg):
+def _attn_dispatch(q, k, v, q_pos, k_pos, window, causal, softcap, cfg, k_min=None):
     big = q.shape[1] * k.shape[1] > 4_194_304  # 2048^2
     if cfg.attn_chunk > 0 and big:
         return _sdpa_flash(
             q, k, v, q_pos, k_pos, window, causal, softcap,
-            q_chunk=cfg.attn_chunk, k_chunk=cfg.attn_chunk,
+            q_chunk=cfg.attn_chunk, k_chunk=cfg.attn_chunk, k_min=k_min,
         )
-    return _sdpa_dense(q, k, v, q_pos, k_pos, window, causal, softcap)
+    return _sdpa_dense(q, k, v, q_pos, k_pos, window, causal, softcap, k_min=k_min)
 
 
 # ---------------------------------------------------------------------------

@@ -76,6 +76,9 @@ class Model:
 
     def apply(self, params, batch: dict, *, positions=None, caches=None,
               last_only: bool = False, return_hidden_only: bool = False) -> ModelOutput:
+        """``positions`` may be (S,) shared or (B, S) per-row — the latter is
+        the serving scheduler's layout (per-request decode depths / the
+        packed token-budget step, position -1 = unused row)."""
         kwargs = dict(positions=positions, caches=caches, last_only=last_only,
                       return_hidden_only=return_hidden_only)
         if self.cfg.family == "vlm":

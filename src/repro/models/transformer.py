@@ -120,8 +120,14 @@ def _logits_out(params, cfg: ModelConfig, x):
 def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches=None, last_only: bool = False, return_hidden_only: bool = False):
     """Forward pass. tokens: (B, S) int32.
 
-    positions: (S,) absolute positions (defaults to arange — training/prefill).
-    caches: stacked KV caches for decode/prefill; returned updated.
+    positions: (S,) absolute positions shared across the batch (defaults to
+    arange — training/prefill), or (B, S) per-row (continuous-batching:
+    ring decode at per-request depths, and the serving scheduler's packed
+    token-budget step, where each row is ONE token of some request and
+    position -1 marks an unused row). caches: stacked KV caches for
+    decode/prefill, returned updated; paged caches may carry per-call
+    ``block_tables``/``ctx_lens``/``token_slots`` (see
+    repro.serving.paged_cache.attach_tables).
     Returns (logits f32 (B, S, vocab_padded), new_caches).
     """
     b, s = tokens.shape

@@ -6,11 +6,13 @@ cache of the shape-specified length). ``ServingEngine`` wraps generation:
 
 * attention-cache families (dense/audio/moe, full attention) serve through
   the **paged continuous-batching scheduler** (serving/scheduler.py) — a
-  global K-Means-quantizable block pool, per-request block tables, chunked
-  prefill, per-step slot refill and preemption-by-eviction. Overflow beyond
+  global K-Means-quantizable block pool, per-request block tables, ONE
+  packed token-budget step per iteration mixing prefill and decode tokens,
+  per-step slot refill and preemption-by-eviction. Overflow beyond
   ``batch_slots`` queues; it is NOT recursively chunked.
 * other families (ssm/hybrid/vlm, SWA archs) fall back to the fixed-slot
-  ring-buffer batcher, iterating slot-sized batches.
+  ring-buffer batcher, iterating slot-sized batches; left-pad tokens are
+  masked out of attention via a per-row ``pad_len`` on the ring caches.
 
 The quantization story end-to-end:
   weights    : K-Means W4 (QLinearParams tree)        — paper §III-A
@@ -45,7 +47,8 @@ class ServeConfig:
     paged: bool = True  # False forces the fixed-slot ring-buffer path
     block_size: int = 16  # tokens per KV block
     n_blocks: int = 0  # pool size per layer; 0 -> slots * ceil(cache_len/block_size)
-    prefill_chunk: int = 32  # chunked-prefill token granularity
+    prefill_chunk: int = 32  # prefill share of the default token budget
+    token_budget: int = 0  # packed-step rows; 0 -> slots + prefill_chunk
 
 
 def make_prefill_step(model: Model, sc: ServeConfig) -> Callable:
@@ -87,6 +90,26 @@ def make_serve_step(model: Model, sc: ServeConfig) -> Callable:
         return next_tok.astype(jnp.int32), out.caches, logits
 
     return serve_step
+
+
+def _attach_pad_lens(caches, pad_lens: jax.Array):
+    """Insert a per-row ``pad_len`` into every ring attention-cache dict.
+
+    A cache dict is recognized by its ``slot_pos`` leaf; stacked caches
+    (leading scan axes) get the (B,) vector broadcast per layer. SSM/RG-LRU
+    state dicts carry no ``slot_pos`` and pass through untouched (left-pad
+    pollution of recurrent state is inherent to the fixed-slot batcher).
+    """
+    if isinstance(caches, dict):
+        if "slot_pos" in caches:
+            lead = caches["slot_pos"].shape[:-1]  # (), (L,) or (G, n_self)
+            return caches | {
+                "pad_len": jnp.broadcast_to(pad_lens, (*lead, pad_lens.shape[0]))
+            }
+        return {k: _attach_pad_lens(v, pad_lens) for k, v in caches.items()}
+    if isinstance(caches, list):
+        return [_attach_pad_lens(c, pad_lens) for c in caches]
+    return caches
 
 
 class ServingEngine:
@@ -146,6 +169,11 @@ class ServingEngine:
         caches = self.model.init_caches(
             b, self.sc.cache_len, jnp.dtype(self.sc.cache_dtype), quantized=self.sc.kv_quant
         )
+        # pad tokens land in the KV cache at positions [0, pad_len) — attach
+        # the per-row pad length so attention masks them (they used to be
+        # attended as real context, skewing short prompts in mixed batches)
+        pads = jnp.array([plen - len(p) for p in prompts], jnp.int32)
+        caches = _attach_pad_lens(caches, pads)
         tok, caches, logits = self._prefill(self.params, caches, {"tokens": toks,
             **self._img(b)})
         key = jax.random.PRNGKey(seed)

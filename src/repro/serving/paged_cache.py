@@ -29,7 +29,7 @@ import jax.numpy as jnp
 __all__ = ["PagedCacheConfig", "BlockAllocator", "attach_tables", "detach_tables",
            "blocks_needed"]
 
-_TABLE_KEYS = ("block_tables", "ctx_lens")
+_TABLE_KEYS = ("block_tables", "ctx_lens", "token_slots")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,8 +80,19 @@ class BlockAllocator:
 
 
 def attach_tables(pools, block_tables: jax.Array, ctx_lens: jax.Array,
-                  n_layers: int, scan_layers: bool):
+                  n_layers: int, scan_layers: bool, token_slots=None):
     """Pool tree + per-call (B, max_blk)/(B,) tables -> apply-ready caches.
+
+    Two layouts share this interface:
+
+    * per-sequence (token_slots=None): batch row ``b`` is one sequence —
+      ``block_tables[b]`` is its table, ``ctx_lens[b]`` its valid context.
+      This is the prefill / classic decode layout.
+    * packed (token_slots (T,)): batch row ``t`` is ONE TOKEN of scheduler
+      slot ``token_slots[t]``; ``block_tables`` stays per *slot*
+      (slots, max_blk) and ``ctx_lens`` is per token (T,). The per-row table
+      gather (``block_tables[token_slots]``) happens device-side inside
+      ``attention_apply`` — the token-budget mixed prefill+decode step.
 
     Under ``scan_layers`` caches are scanned over a leading L axis, so the
     (identical) tables are broadcast per layer; unscanned models get the same
@@ -89,13 +100,14 @@ def attach_tables(pools, block_tables: jax.Array, ctx_lens: jax.Array,
     """
     bt = block_tables.astype(jnp.int32)
     cl = ctx_lens.astype(jnp.int32)
+    extra = {"block_tables": bt, "ctx_lens": cl}
+    if token_slots is not None:
+        extra["token_slots"] = token_slots.astype(jnp.int32)
     if scan_layers:
-        extra = {
-            "block_tables": jnp.broadcast_to(bt, (n_layers, *bt.shape)),
-            "ctx_lens": jnp.broadcast_to(cl, (n_layers, *cl.shape)),
-        }
+        extra = {k: jnp.broadcast_to(v, (n_layers, *v.shape))
+                 for k, v in extra.items()}
         return pools | extra
-    return [layer | {"block_tables": bt, "ctx_lens": cl} for layer in pools]
+    return [layer | extra for layer in pools]
 
 
 def detach_tables(caches):

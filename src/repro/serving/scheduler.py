@@ -2,26 +2,37 @@
 
 Request lifecycle::
 
-    QUEUED --admit (FCFS, free-block budget)--> RUNNING
+    QUEUED --admit (FCFS, free-block budget)--> RUNNING (prefilling)
+    RUNNING --prompt fully written--> RUNNING (decoding)
     RUNNING --EOS / max-tokens--> FINISHED      (slot + blocks freed,
     RUNNING --pool exhausted--> PREEMPTED        refilled next step)
     PREEMPTED --requeued at the front--> QUEUED  (recompute on re-admission)
 
-The decode hot loop is ONE jitted function of fixed shape (``slots`` rows,
-``max_blocks_per_seq`` table columns): every step all slots decode one token
-against their own block tables; finished slots are refilled from the queue
-between steps, so throughput under mixed-length traffic no longer degrades
-to the slowest request of a chunk. Prefill runs per request in fixed-size
-token chunks (``prefill_chunk``) through a second jitted function — a new
-request only ever costs its own prompt length, not the batch-wide pad.
+The hot loop is ONE jitted *packed* step of fixed shape: every scheduler
+iteration assembles a flat batch of exactly ``token_budget`` token rows —
+one decode token for every decoding slot (reserved FIRST, so admissions can
+never starve running requests) plus as many prefill tokens from admitting
+requests as fit in the remaining budget — with per-token (slot, position)
+vectors. Each row writes its token's KV into the slot's blocks and attends
+through the slot's block table; rows of the same request are causally
+ordered by position within the same forward (write-then-attend), so a
+prefill segment and the step's decode tokens ride in one ``model.apply``.
+Unused rows carry position -1 and are masked out of both the scatter and the
+attention. There is no separate prefill function and no batch=1 serial
+admission phase: prefill/decode interference is gone by construction, and a
+step's cost is always exactly ``token_budget`` tokens.
 
-Preemption is by eviction: when a growing sequence cannot get a block, the
+Preemption is by eviction: when a decoding sequence cannot get a block, the
 most recently admitted *other* request is evicted (blocks freed, requeued
-front) and recomputed later — deterministic K-Means assignment makes the
-recomputed KV bit-identical, so preemption never changes tokens.
+front, prefill progress reset) and recomputed later — deterministic K-Means
+assignment makes the recomputed KV bit-identical, so preemption never
+changes tokens.
 
-Sampling happens host-side from logits the step functions return (greedy or
-per-request-keyed temperature) — decode logits, not stale prefill logits.
+Sampling happens host-side from the logits the packed step returns (greedy
+or per-request-keyed temperature): a decoding request samples from its
+decode row; a request whose LAST prompt token was written this step samples
+its first token from that row — per-request keys make sampled outputs
+independent of how steps were packed.
 """
 
 from __future__ import annotations
@@ -63,9 +74,15 @@ class Request:
     state: RequestState = RequestState.QUEUED
     context: list[int] = dataclasses.field(default_factory=list)  # tokens fed
     generated: list[int] = dataclasses.field(default_factory=list)
+    prefilled: int = 0  # context tokens written to the cache so far
     next_token: int | None = None  # sampled, not yet fed to the model
     blocks: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+
+    @property
+    def decoding(self) -> bool:
+        """Context fully written: the next packed step feeds next_token."""
+        return self.prefilled >= len(self.context)
 
     @property
     def done(self) -> bool:
@@ -82,18 +99,26 @@ class Request:
 
 
 class Scheduler:
-    """Owns the block pool, the allocator, and the two jitted step functions.
+    """Owns the block pool, the allocator, and the single jitted packed step.
 
     ``sc`` is a :class:`repro.serving.engine.ServeConfig`; its ``cache_len``
     bounds per-request context (prompt + generated), ``block_size`` /
     ``n_blocks`` size the pool (n_blocks=0 -> slots * blocks-per-request, a
-    no-preemption default; pass a smaller pool to exercise preemption).
+    no-preemption default; pass a smaller pool to exercise preemption), and
+    ``token_budget`` fixes the packed step's row count (0 -> slots +
+    prefill_chunk; must be >= slots so every decoding slot always fits).
     """
 
     def __init__(self, model, params, sc, slots: int = 8):
         if not model.supports_paged_cache():
             raise ValueError(f"family {model.cfg.family} cannot use the paged scheduler")
         self.model, self.params, self.sc, self.slots = model, params, sc, slots
+        self.token_budget = sc.token_budget or (slots + sc.prefill_chunk)
+        if self.token_budget < slots:
+            raise ValueError(
+                f"token_budget {self.token_budget} < slots {slots}: decode "
+                "reservation needs one row per slot"
+            )
         max_blk = blocks_needed(sc.cache_len, sc.block_size)
         n_blocks = sc.n_blocks or slots * max_blk
         self.pcfg = PagedCacheConfig(block_size=sc.block_size, n_blocks=n_blocks,
@@ -107,50 +132,31 @@ class Scheduler:
         self._running: list[Request] = []
         self._slot_free = list(range(slots - 1, -1, -1))
         self._next_rid = 0
-        self.stats = {"decode_steps": 0, "prefill_chunks": 0, "preemptions": 0,
-                      "peak_occupancy": 0.0, "decode_slot_tokens": 0}
-        self._prefill_fn = jax.jit(self._make_prefill_chunk())
-        self._decode_fn = jax.jit(self._make_decode_step())
+        self.stats = {"packed_steps": 0, "decode_steps": 0, "prefill_chunks": 0,
+                      "mixed_steps": 0, "preemptions": 0, "peak_occupancy": 0.0,
+                      "decode_slot_tokens": 0, "prefill_tokens": 0,
+                      "packed_tokens": 0}
+        self._packed_fn = jax.jit(self._make_packed_step())
 
     # ------------------------------------------------------------------ jit
-    def _attach(self, bt, cl):
-        return attach_tables(self.pools, bt, cl, self.model.cfg.n_layers,
-                             self.model.cfg.scan_layers)
-
-    def _make_prefill_chunk(self):
-        model, sc, chunk = self.model, self.sc, self.sc.prefill_chunk
-
-        def prefill_chunk(params, pools, bt, tokens, start, plen):
-            """tokens (1, chunk) zero-padded; writes positions
-            [start, min(start+chunk, plen)); returns logits at row plen-1
-            (garbage unless this chunk contains it)."""
-            positions = start + jnp.arange(chunk, dtype=jnp.int32)
-            ctx = jnp.minimum(start + chunk, plen)[None]
-            caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
-                                   model.cfg.scan_layers)
-            with use_apply_config(sc.qconfig):
-                out = model.apply(params, {"tokens": tokens},
-                                  positions=positions, caches=caches)
-            logits = out.logits[0, jnp.clip(plen - 1 - start, 0, chunk - 1)]
-            return detach_tables(out.caches), logits[: model.cfg.vocab_size]
-
-        return prefill_chunk
-
-    def _make_decode_step(self):
+    def _make_packed_step(self):
         model, sc = self.model, self.sc
 
-        def decode_step(params, pools, bt, ctx_lens, tokens):
-            """One token for every slot. ctx_lens counts the incoming token
-            (0 = idle slot: nothing is written or read for that row)."""
-            positions = (ctx_lens - 1)[:, None]
-            caches = attach_tables(pools, bt, ctx_lens, model.cfg.n_layers,
-                                   model.cfg.scan_layers)
+        def packed_step(params, pools, bt, slot_ids, positions, ctx, tokens):
+            """The unified token-budget forward: tokens/positions/ctx/slot_ids
+            are flat (T,) vectors (position -1 = unused row), bt is the
+            per-SLOT (slots, max_blk) block-table matrix. Row t writes
+            tokens[t] at positions[t] into slot_ids[t]'s blocks and attends
+            to that slot's context up to positions[t]; returns per-row
+            next-token logits (T, vocab)."""
+            caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
+                                   model.cfg.scan_layers, token_slots=slot_ids)
             with use_apply_config(sc.qconfig):
-                out = model.apply(params, {"tokens": tokens},
-                                  positions=positions, caches=caches)
-            return detach_tables(out.caches), out.logits[:, -1, : model.cfg.vocab_size]
+                out = model.apply(params, {"tokens": tokens[:, None]},
+                                  positions=positions[:, None], caches=caches)
+            return detach_tables(out.caches), out.logits[:, 0, : model.cfg.vocab_size]
 
-        return decode_step
+        return packed_step
 
     # ----------------------------------------------------------------- host
     def submit(self, prompt: list[int], max_new_tokens: int,
@@ -184,15 +190,16 @@ class Scheduler:
 
     def step(self, results: dict[int, list[int]]) -> bool:
         """One scheduler iteration: refill slots from the queue, retire
-        finished requests, decode one token for every running slot. Finished
-        outputs are added to ``results``. Returns True while work remains —
-        online drivers (bench_serving) interleave ``submit`` between steps.
+        finished requests, run one packed token-budget forward over all
+        running slots. Finished outputs are added to ``results``. Returns
+        True while work remains — online drivers (bench_serving) interleave
+        ``submit`` between steps.
         """
         admitted = self._refill_slots()
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
         if self._running:
-            self._decode_once(results)
+            self._packed_once(results)
             return True
         if self._queue and not admitted:  # head can never fit: whole pool is free
             r = self._queue[0]
@@ -202,10 +209,12 @@ class Scheduler:
             )
         return bool(self._queue)
 
-    # ------------------------------------------------------- admission/prefill
+    # ------------------------------------------------------------- admission
     def _refill_slots(self) -> int:
         """FCFS admission: head of queue enters iff a slot is free and the
-        pool can hold its full current context. Returns #admitted."""
+        pool can hold its full current context. Returns #admitted. Admission
+        only binds a slot + blocks; the prompt is written by the packed steps
+        (alongside everyone else's decode tokens), never serially."""
         admitted = 0
         while self._queue and self._slot_free:
             r = self._queue[0]
@@ -215,56 +224,93 @@ class Scheduler:
                 break
             self._queue.popleft()
             r.blocks, r.slot, r.state = blocks, self._slot_free.pop(), RequestState.RUNNING
+            r.prefilled = 0
             self._running.append(r)
-            self._prefill(r)
             admitted += 1
         self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
                                            self.allocator.occupancy)
         return admitted
 
-    def _prefill(self, r: Request) -> None:
-        """Chunked prefill of r.context into r.blocks; samples the first
-        token from the REAL last-position logits unless the request is a
-        re-admitted preemption (its next_token is already decided)."""
-        chunk = self.sc.prefill_chunk
-        plen = len(r.context)
-        toks = np.zeros((1, -(-plen // chunk) * chunk), np.int32)
-        toks[0, :plen] = r.context
-        bt = self._bt_row(r)[None]
-        logits = None
-        for start in range(0, plen, chunk):
-            self.pools, logits = self._prefill_fn(
-                self.params, self.pools, bt, jnp.asarray(toks[:, start:start + chunk]),
-                jnp.int32(start), jnp.int32(plen),
-            )
-            self.stats["prefill_chunks"] += 1
-        if r.next_token is None:
-            r.next_token = self._sample(logits, r)
-            r.generated.append(r.next_token)
+    # ------------------------------------------------------------ packed step
+    def _packed_once(self, results: dict) -> None:
+        """Assemble and run one token-budget forward.
 
-    # ---------------------------------------------------------------- decode
-    def _decode_once(self, results: dict) -> None:
+        Budget policy: decode rows FIRST (one per decoding slot — a step can
+        never stall decode to admit), then prefill segments FCFS over the
+        remaining budget (a request's segment is its next unwritten context
+        tokens, clipped to what fits; large prompts span several steps).
+        """
+        t_budget = self.token_budget
+        # decode reservation: guarantee a block for each incoming token (may
+        # preempt — victims leave self._running, including prefilling ones)
         for r in list(self._running):
-            if r.state is RequestState.RUNNING:  # not preempted by an earlier _grow
+            if r.state is RequestState.RUNNING and r.decoding:
                 self._grow(r)
         if not self._running:
             return
-        bt = np.full((self.slots, self.pcfg.max_blocks_per_seq), -1, np.int32)
-        cl = np.zeros((self.slots,), np.int32)
-        tk = np.zeros((self.slots, 1), np.int32)
+        decoders = [r for r in self._running if r.decoding]
+        segments: list[tuple[Request, int, int]] = []  # (request, start, n)
+        budget = t_budget - len(decoders)
+        for r in self._running:
+            if budget <= 0:
+                break
+            if not r.decoding:
+                n = min(budget, len(r.context) - r.prefilled)
+                segments.append((r, r.prefilled, n))
+                budget -= n
+
+        max_blk = self.pcfg.max_blocks_per_seq
+        bt = np.full((self.slots, max_blk), -1, np.int32)
+        slot_ids = np.zeros((t_budget,), np.int32)
+        pos = np.full((t_budget,), -1, np.int32)
+        tok = np.zeros((t_budget,), np.int32)
         for r in self._running:
             bt[r.slot] = self._bt_row(r)
-            cl[r.slot] = len(r.context) + 1  # incoming token included
-            tk[r.slot, 0] = r.next_token
-        self.pools, logits = self._decode_fn(
-            self.params, self.pools, jnp.asarray(bt), jnp.asarray(cl), jnp.asarray(tk)
+        row = 0
+        decode_row: dict[int, int] = {}
+        for r in decoders:
+            slot_ids[row], pos[row], tok[row] = r.slot, len(r.context), r.next_token
+            decode_row[r.rid] = row
+            row += 1
+        last_row: dict[int, int] = {}
+        for r, start, n in segments:
+            sl = slice(row, row + n)
+            slot_ids[sl] = r.slot
+            pos[sl] = np.arange(start, start + n)
+            tok[sl] = r.context[start : start + n]
+            last_row[r.rid] = row + n - 1
+            row += n
+        ctx = pos + 1  # write/attend horizon per row (-1 rows stay invalid)
+
+        self.pools, logits = self._packed_fn(
+            self.params, self.pools, jnp.asarray(bt), jnp.asarray(slot_ids),
+            jnp.asarray(pos), jnp.asarray(ctx), jnp.asarray(tok),
         )
-        self.stats["decode_steps"] += 1
-        self.stats["decode_slot_tokens"] += len(self._running)
-        for r in self._running:
+
+        st = self.stats
+        st["packed_steps"] += 1
+        st["packed_tokens"] += row
+        st["decode_slot_tokens"] += len(decoders)
+        st["prefill_tokens"] += sum(n for _, _, n in segments)
+        st["prefill_chunks"] += len(segments)
+        if decoders:
+            st["decode_steps"] += 1
+        if decoders and segments:
+            st["mixed_steps"] += 1
+
+        for r in decoders:
             r.context.append(r.next_token)
-            r.next_token = self._sample(logits[r.slot], r)
+            r.prefilled += 1  # the decode row wrote it to the cache
+            r.next_token = self._sample(logits[decode_row[r.rid]], r)
             r.generated.append(r.next_token)
+        for r, start, n in segments:
+            r.prefilled = start + n
+            if r.decoding and r.next_token is None:
+                # the prompt's real last token was in this step: its logits
+                # row is the first sampled token (a re-admitted preemption
+                # keeps its already-decided next_token instead)
+                r.next_token = self._sample(logits[last_row[r.rid]], r)
+                r.generated.append(r.next_token)
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
 
@@ -293,6 +339,7 @@ class Scheduler:
         r.blocks = []
         self._slot_free.append(r.slot)
         r.slot = -1
+        r.prefilled = 0  # re-admission rewrites the whole context
         r.state = RequestState.PREEMPTED
         self._running.remove(r)
         self._queue.appendleft(r)  # front: preserves FCFS completion order

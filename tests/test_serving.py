@@ -1,7 +1,9 @@
 """Serving subsystem tests: ring-buffer wraparound, quantized-KV parity,
-paged-cache equivalence with the dense path, the continuous-batching
-scheduler (admission / slot refill / preemption determinism), and the
-Pallas paged-attention kernel vs its jnp oracles."""
+paged-cache equivalence with the dense path, the packed token-budget
+scheduler (mixed prefill+decode steps, decode-reservation accounting,
+admission / slot refill / preemption determinism), the fixed-slot
+fallback's pad masking, and the Pallas paged-attention kernel (single-token
+and query-segment contracts) vs its jnp oracles."""
 
 import dataclasses
 
@@ -190,6 +192,96 @@ def test_paged_int4_matches_ring_int4(small_lm):
 # scheduler behaviour
 # ---------------------------------------------------------------------------
 
+def test_packed_mixed_traffic_matches_sequential_reference(small_lm):
+    """Tentpole acceptance: packed mixed prefill+decode steps (online
+    arrivals landing while other requests decode) produce greedy tokens
+    identical to unbatched per-prompt generation. A tiny token budget forces
+    prompts to span several packed steps."""
+    cfg, model, params, qp = small_lm
+    prompts = [[(7 * i + j) % cfg.vocab_size or 1 for j in range(n)]
+               for i, n in enumerate([13, 2, 9, 5, 1, 17, 4])]
+    budgets = [5, 8, 3, 6, 2, 4, 7]
+    ring = ServingEngine(model, qp, ServeConfig(cache_len=64, qconfig=QCFG,
+                                                cache_dtype="float32", paged=False),
+                         batch_slots=1)
+    want = {i: ring.generate([p], max_new_tokens=b)[0]
+            for i, (p, b) in enumerate(zip(prompts, budgets))}
+
+    eng = ServingEngine(model, qp,
+                        ServeConfig(cache_len=64, qconfig=QCFG,
+                                    cache_dtype="float32", block_size=8,
+                                    prefill_chunk=4, token_budget=8),
+                        batch_slots=3)
+    sched = eng.scheduler
+    results: dict[int, list[int]] = {}
+    rid_of = {}
+    # two requests up front, the rest arrive online every other step — their
+    # prompts must prefill INSIDE steps that also decode the running slots
+    rid_of[sched.submit(prompts[0], budgets[0], salt=0)] = 0
+    rid_of[sched.submit(prompts[1], budgets[1], salt=1)] = 1
+    nxt, steps = 2, 0
+    while sched.step(results) or nxt < len(prompts):
+        steps += 1
+        if nxt < len(prompts) and steps % 2 == 0:
+            rid_of[sched.submit(prompts[nxt], budgets[nxt], salt=nxt)] = nxt
+            nxt += 1
+    assert sched.stats["mixed_steps"] > 0, "no mixed prefill+decode step exercised"
+    assert {rid_of[r]: v for r, v in results.items()} == want
+
+
+def test_packed_budget_decode_never_starved(small_lm):
+    """Token-budget accounting: while a long prompt admits and prefills over
+    several packed steps, every already-decoding request still generates
+    exactly one token per step (decode rows are reserved before prefill)."""
+    cfg, model, params, qp = small_lm
+    eng = ServingEngine(model, qp,
+                        ServeConfig(cache_len=64, qconfig=QCFG,
+                                    cache_dtype="float32", block_size=8,
+                                    prefill_chunk=4, token_budget=6),
+                        batch_slots=3)
+    sched = eng.scheduler
+    results: dict[int, list[int]] = {}
+    ra = sched.submit([1, 2, 3], 32, salt=0)
+    while not any(r.rid == ra and r.decoding for r in sched._running):
+        sched.step(results)
+    # long prompt: at budget 6 with one decode row reserved, 5 prefill
+    # tokens/step -> at least 5 mixed steps before rb decodes
+    rb = sched.submit([2] * 30, 4, salt=1)
+    a = next(r for r in sched._running if r.rid == ra)
+    while any(r.rid == rb and not r.decoding for r in sched._running) \
+            or not any(r.rid == rb for r in sched._running):
+        before = len(a.generated)
+        sched.step(results)
+        assert len(a.generated) == before + 1, "decode starved by admission"
+    assert sched.stats["mixed_steps"] >= 5
+    results.update(sched.run())
+    assert len(results[ra]) == 32 and len(results[rb]) == 4
+
+
+def test_packed_step_rejects_budget_below_slots(small_lm):
+    cfg, model, params, qp = small_lm
+    with pytest.raises(ValueError, match="token_budget"):
+        ServingEngine(model, qp,
+                      ServeConfig(cache_len=32, qconfig=QCFG,
+                                  cache_dtype="float32", token_budget=2),
+                      batch_slots=4)
+
+
+def test_fallback_padding_not_attended(small_lm):
+    """Fixed-slot fallback regression: left-pad tokens used to be written to
+    the KV cache at real positions and attended — mixed-length batched
+    generation must match unpadded per-prompt generation."""
+    cfg, model, params, qp = small_lm
+    eng = ServingEngine(model, qp,
+                        ServeConfig(cache_len=32, qconfig=QCFG,
+                                    cache_dtype="float32", paged=False),
+                        batch_slots=4)
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [4, 5], [6], [7, 8, 9, 10]]
+    batched = eng.generate(prompts, max_new_tokens=6)
+    single = [eng.generate([p], max_new_tokens=6)[0] for p in prompts]
+    assert batched == single
+
+
 def test_scheduler_queue_overflow_and_slot_refill(small_lm):
     """More requests than slots: all are served through the queue (iterative
     admission, not recursive chunking) with per-request budgets."""
@@ -350,20 +442,49 @@ def test_paged_attn_kernel_matches_ref():
     from repro.kernels.ref import paged_attn_ref
 
     q, kp, vp, bt, ctx = _paged_fixture()
-    ref = paged_attn_ref(q, kp, vp, bt, ctx, (ctx - 1)[:, None])
-    ker = paged_attn_kernel_call(q[:, 0], kp, vp, block_tables=bt, ctx_lens=ctx,
-                                 interpret=True)
-    np.testing.assert_allclose(ker, ref[:, 0], rtol=1e-5, atol=1e-5)
+    q_pos = (ctx - 1)[:, None]
+    ref = paged_attn_ref(q, kp, vp, bt, ctx, q_pos)
+    ker = paged_attn_kernel_call(q, kp, vp, block_tables=bt, ctx_lens=ctx,
+                                 q_pos=q_pos, interpret=True)
+    np.testing.assert_allclose(ker, ref, rtol=1e-5, atol=1e-5)
 
 
-def test_paged_attn_quant_kernel_matches_ref():
+def _segment_fixture(seg: int):
+    """Ragged query segments: each request's segment covers its last
+    min(seg, ctx) positions; shorter segments are padded with q_pos = -1."""
+    _, kp, vp, bt, ctx = _paged_fixture()
+    b, (kv, hd) = bt.shape[0], kp.shape[2:]
+    g = 2
+    q = jax.random.normal(jax.random.PRNGKey(7), (b, seg, kv, g, hd))
+    q_pos = np.full((b, seg), -1, np.int32)
+    for i in range(b):
+        n = min(seg, int(ctx[i]))
+        q_pos[i, :n] = np.arange(int(ctx[i]) - n, int(ctx[i]))
+    return q, kp, vp, bt, ctx, jnp.array(q_pos)
+
+
+def test_paged_attn_kernel_query_segments_match_ref():
+    """Multi-token query segments (the packed/chunked-prefill shape): kernel
+    matches the oracle on every valid row; padded rows (q_pos = -1) are
+    ignored."""
+    from repro.kernels.paged_attn import paged_attn_kernel_call
+    from repro.kernels.ref import paged_attn_ref
+
+    q, kp, vp, bt, ctx, q_pos = _segment_fixture(seg=4)
+    ref = paged_attn_ref(q, kp, vp, bt, ctx, q_pos)
+    ker = paged_attn_kernel_call(q, kp, vp, block_tables=bt, ctx_lens=ctx,
+                                 q_pos=q_pos, interpret=True)
+    valid = np.asarray(q_pos) >= 0
+    np.testing.assert_allclose(np.asarray(ker)[valid], np.asarray(ref)[valid],
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.isfinite(ker).all())  # padded rows garbage but finite
+
+
+def _quant_pages(kp, vp):
     from repro.core.codebook import assign_via_boundaries
     from repro.core.quantize import pack_int4
-    from repro.kernels.paged_attn import paged_attn_kernel_call
-    from repro.kernels.ref import paged_attn_quant_ref
     from repro.models.model import _default_codebook
 
-    q, kp, vp, bt, ctx = _paged_fixture()
     book = _default_codebook(4)
 
     def quant(x):
@@ -372,21 +493,77 @@ def test_paged_attn_quant_kernel_matches_ref():
 
     ki, ks = quant(kp)
     vi, vs = quant(vp)
-    ref = paged_attn_quant_ref(q, ki, ks, vi, vs, book, bt, ctx, (ctx - 1)[:, None])
-    ker = paged_attn_kernel_call(q[:, 0], ki, ks, vi, vs, book, block_tables=bt,
-                                 ctx_lens=ctx, interpret=True)
-    np.testing.assert_allclose(ker, ref[:, 0], rtol=1e-5, atol=1e-5)
+    return ki, ks, vi, vs, book
+
+
+def test_paged_attn_quant_kernel_matches_ref():
+    from repro.kernels.paged_attn import paged_attn_kernel_call
+    from repro.kernels.ref import paged_attn_quant_ref
+
+    q, kp, vp, bt, ctx = _paged_fixture()
+    ki, ks, vi, vs, book = _quant_pages(kp, vp)
+    q_pos = (ctx - 1)[:, None]
+    ref = paged_attn_quant_ref(q, ki, ks, vi, vs, book, bt, ctx, q_pos)
+    ker = paged_attn_kernel_call(q, ki, ks, vi, vs, book, block_tables=bt,
+                                 ctx_lens=ctx, q_pos=q_pos, interpret=True)
+    np.testing.assert_allclose(ker, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attn_quant_kernel_query_segments_match_ref():
+    from repro.kernels.paged_attn import paged_attn_kernel_call
+    from repro.kernels.ref import paged_attn_quant_ref
+
+    q, kp, vp, bt, ctx, q_pos = _segment_fixture(seg=5)
+    ki, ks, vi, vs, book = _quant_pages(kp, vp)
+    ref = paged_attn_quant_ref(q, ki, ks, vi, vs, book, bt, ctx, q_pos)
+    ker = paged_attn_kernel_call(q, ki, ks, vi, vs, book, block_tables=bt,
+                                 ctx_lens=ctx, q_pos=q_pos, interpret=True)
+    valid = np.asarray(q_pos) >= 0
+    np.testing.assert_allclose(np.asarray(ker)[valid], np.asarray(ref)[valid],
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_paged_kernel_path_in_model_decode(small_lm, monkeypatch):
-    """REPRO_PAGED_KERNEL routing: single-token decode through the Pallas
-    kernel produces the same logits as the jnp gather path."""
+    """Kernel routing: prefill (query segment) + decode through the Pallas
+    kernel produce the same logits as the jnp gather path."""
     cfg, model, params, _ = small_lm
     toks = jax.random.randint(jax.random.PRNGKey(11), (1, 6), 0, cfg.vocab_size)
     a = _paged_prefill_logits(model, params, toks, block_size=4)
     monkeypatch.setattr(L, "_USE_PAGED_KERNEL", True)
     b = _paged_prefill_logits(model, params, toks, block_size=4)
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_paged_kernel_default_routing(monkeypatch):
+    """REPRO_PAGED_KERNEL is opt-OUT on TPU, opt-in elsewhere."""
+    on_tpu = jax.default_backend() == "tpu"
+    monkeypatch.delenv("REPRO_PAGED_KERNEL", raising=False)
+    assert L._paged_kernel_default() == on_tpu
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "0")
+    assert L._paged_kernel_default() is False
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "off")
+    assert L._paged_kernel_default() is False
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "1")
+    assert L._paged_kernel_default() is True
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "auto")
+    assert L._paged_kernel_default() == on_tpu
+
+
+def test_packed_scheduler_through_kernel(small_lm, monkeypatch):
+    """The full packed token-budget step routed through the Pallas kernel
+    (interpret mode) generates the same greedy tokens as the jnp path."""
+    cfg, model, params, qp = small_lm
+    mk = lambda: ServingEngine(
+        model, qp,
+        ServeConfig(cache_len=32, qconfig=QCFG, cache_dtype="float32",
+                    block_size=4, prefill_chunk=2, token_budget=4),
+        batch_slots=2,
+    )
+    prompts = [[1, 2, 3, 4, 5], [6, 9]]
+    want = mk().generate(prompts, max_new_tokens=3)
+    monkeypatch.setattr(L, "_USE_PAGED_KERNEL", True)
+    got = mk().generate(prompts, max_new_tokens=3)
+    assert got == want
 
 
 def test_paged_ref_respects_block_table_permutation():
