@@ -24,8 +24,9 @@ import math
 
 import jax.numpy as jnp
 
-from benchmarks.common import capture_activations, emit, eval_ce, trained_lm
+from benchmarks.common import capture_activations, emit, eval_ce, record, trained_lm
 from repro.core.qlinear import QLinearConfig
+from repro.core.quantspec import QuantSpec
 
 
 def _smoothquant_ce(model, params, corpus, acts):
@@ -35,8 +36,6 @@ def _smoothquant_ce(model, params, corpus, acts):
     Implemented as a param transform: equivalent since our per-token scale
     re-normalizes X (the migration changes the effective distribution)."""
     import jax
-
-    from repro.models.model import quantize_params
 
     # fold a global smoothing vector into every quantizable weight using the
     # captured input activations of matching width
@@ -79,17 +78,27 @@ def run() -> None:
                                                outlier_frac=0.005))
     rows["rtn_w4a3"] = eval_ce(model, params, corpus,
                                QLinearConfig(a_bits=3, method="uniform", detection="none"))
+    # per-layer mixed precision (the QuantSpec tentpole): down-proj is the
+    # best-known accuracy-critical matrix (FineQuant) — give it W8
+    rows["mixed_w8_down"] = eval_ce(
+        model, params, corpus,
+        QuantSpec(base=QLinearConfig(detection="dynamic", outlier_frac=0.005),
+                  rules=[("mlp/wd", {"w_bits": 8})]))
 
     print("# Table III analog — held-out CE / PPL by quantization method")
     print("method,ce,ppl,delta_vs_fp")
     for k, ce in rows.items():
         print(f"{k},{ce:.4f},{math.exp(ce):.2f},{ce - rows['fp32']:+.4f}")
+        record(f"ppl_{k}", ce=round(ce, 4), ppl=round(math.exp(ce), 2),
+               delta_vs_fp=round(ce - rows["fp32"], 4))
 
     # ---- the paper's ordering claims ----------------------------------------
     assert rows["oasis_w4a4"] <= rows["kmeans_w4a4"] + 1e-6, "outliers must help"
     assert rows["oasis_w4a4"] <= rows["rtn_w4a4"], "NU-WAQ must beat INT-WAQ"
     assert rows["oasis_w4a3"] <= rows["rtn_w4a3"], "OASIS-A3 must beat RTN-A3"
     assert rows["oasis_w4a4"] >= rows["fp32"] - 0.05
+    assert rows["mixed_w8_down"] <= rows["oasis_w4a4"] + 0.02, \
+        "W8 down-proj must not degrade vs all-W4"
     emit("table3_oasis_w4a4_delta", 0.0, f"ce_delta={rows['oasis_w4a4']-rows['fp32']:.4f}")
     emit("table3_ordering", 0.0, "oasis<=kmeans_no_outlier<=?rtn verified")
     return rows

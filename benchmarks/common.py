@@ -19,13 +19,18 @@ import numpy as np
 from repro.checkpoint.checkpointer import CheckpointManager
 from repro.configs.base import get_smoke_config
 from repro.core.qlinear import QLinearConfig
+from repro.core.quantspec import QuantSpec
 from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline
-from repro.models.model import build
+from repro.models.model import build, quantize_model
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import TrainConfig, Trainer, make_eval_step
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
 CKPT_DIR = RESULTS / "bench_lm"
+
+# Machine-readable results registry: every emit()/record() lands here and
+# benchmarks/run.py snapshots it to BENCH_<module>.json after each module.
+RECORDS: list[dict] = []
 
 _TC = TrainConfig(optimizer=AdamWConfig(lr=2e-3), microbatches=1,
                   warmup_steps=30, total_steps=800, checkpoint_every=400)
@@ -49,24 +54,22 @@ def trained_lm(steps: int = 800):
     return cfg, model, trainer.state["params"], corpus
 
 
-def eval_ce(model, params, corpus, qcfg: QLinearConfig | None = None,
+def eval_ce(model, params, corpus, qcfg: QLinearConfig | QuantSpec | None = None,
             batches: int = 4, seed: int = 123, calib=None) -> float:
     """Held-out cross-entropy (PPL = exp(ce)); quantizes first if qcfg given.
 
-    The SAME qcfg governs apply-time behaviour (detection mode, outlier
-    budget) via use_apply_config — quantize-time and apply-time configs must
-    match or detection sweeps silently no-op."""
-    from repro.core.qlinear import use_apply_config
-
+    ``qcfg`` may be a bare QLinearConfig (rule-free spec) or a full
+    QuantSpec. Apply-time behaviour (detection mode, outlier budget) rides
+    inside the produced QLinearParams — nothing ambient to keep in sync."""
     if qcfg is not None:
-        params = model.quantize(params, qcfg, calib=calib)
+        spec = qcfg if isinstance(qcfg, QuantSpec) else QuantSpec(base=qcfg)
+        params = quantize_model(model, params, spec, calib=calib)
     eval_step = jax.jit(make_eval_step(model, _TC))
     pipe = TokenPipeline(corpus.tokens, DataConfig(seq_len=64, global_batch=16, seed=seed))
     ces = []
-    with use_apply_config(qcfg or QLinearConfig()):
-        for _ in range(batches):
-            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
-            ces.append(float(eval_step(params, batch)["ce"]))
+    for _ in range(batches):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        ces.append(float(eval_step(params, batch)["ce"]))
     return float(np.mean(ces))
 
 
@@ -100,3 +103,10 @@ def timed(fn, *args, reps: int = 3):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    RECORDS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+
+
+def record(name: str, **fields):
+    """Structured (machine-readable) benchmark result; run.py writes these to
+    BENCH_<module>.json so the perf trajectory is trackable across PRs."""
+    RECORDS.append({"name": name, **fields})

@@ -1,14 +1,23 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §6).
 
-Emits ``name,us_per_call,derived`` CSV lines (plus each module's own tables).
+Emits ``name,us_per_call,derived`` CSV lines (plus each module's own tables)
+AND, per module, a machine-readable ``BENCH_<name>.json`` in the repo root
+(status, elapsed, every ``common.emit``/``common.record`` result) so the
+perf trajectory is tracked across PRs instead of living in scrollback.
+
 Run: PYTHONPATH=src python -m benchmarks.run [module ...]
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
+import platform
 import sys
 import time
 import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 MODULES = [
     "bench_lut_config",        # Table I + Fig 16
@@ -23,7 +32,30 @@ MODULES = [
 ]
 
 
+def _write_result(name: str, ok: bool, elapsed: float, records: list[dict],
+                  error: str | None = None) -> None:
+    import jax
+
+    payload = {
+        "module": name,
+        "ok": ok,
+        "elapsed_s": round(elapsed, 2),
+        "config": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+        },
+        "records": records,
+    }
+    if error:
+        payload["error"] = error
+    (ROOT / f"BENCH_{name}.json").write_text(json.dumps(payload, indent=1))
+
+
 def main() -> None:
+    from benchmarks import common
+
     only = set(sys.argv[1:])
     failures = []
     for name in MODULES:
@@ -31,12 +63,17 @@ def main() -> None:
             continue
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
         t0 = time.time()
+        common.RECORDS.clear()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             mod.run()
-            print(f"--- {name} ok in {time.time()-t0:.1f}s")
+            elapsed = time.time() - t0
+            _write_result(name, True, elapsed, list(common.RECORDS))
+            print(f"--- {name} ok in {elapsed:.1f}s -> BENCH_{name}.json")
         except Exception:  # noqa: BLE001 — report, continue, fail at end
             failures.append(name)
+            _write_result(name, False, time.time() - t0, list(common.RECORDS),
+                          error=traceback.format_exc(limit=5))
             traceback.print_exc()
     if failures:
         print(f"\nFAILED benchmarks: {failures}")

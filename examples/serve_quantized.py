@@ -1,17 +1,25 @@
-"""Serving driver: batched requests against a K-Means-quantized model.
+"""Serving driver: batched requests against a K-Means-quantized model,
+served from a saved quantized artifact.
 
 Trains a tiny LM briefly (so generations aren't pure noise), quantizes it
-W4A4 + dynamic outliers + int4 K-Means KV cache, and serves a batch of
-prompts through the prefill/decode engine — the paper's full inference path.
+under a declarative per-layer QuantSpec (W4A4 + dynamic outliers everywhere,
+W8 down-projections, int4 K-Means KV cache), SAVES the quantized model with
+``save_quantized``, then — like a production serving process — LOADS the
+artifact and serves a batch of prompts through the paged continuous-batching
+engine. No calibration or K-Means code runs on the load path.
 
-Run: PYTHONPATH=src python examples/serve_quantized.py
+Run: PYTHONPATH=src python examples/serve_quantized.py [--steps 200] [--smoke]
 """
 
+import argparse
+import sys
+import tempfile
+
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_smoke_config
-from repro.core.qlinear import QLinearConfig
+from repro.core import QLinearConfig, QuantSpec, quantize_model
+from repro.core.artifact import load_quantized, save_quantized
 from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline
 from repro.models.model import build
 from repro.optim.adamw import AdamWConfig
@@ -20,47 +28,67 @@ from repro.train.trainer import TrainConfig, Trainer
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200, help="warmup train steps")
+    ap.add_argument("--smoke", action="store_true", help="CI: minimal training")
+    args = ap.parse_args()
+    steps = 30 if args.smoke else args.steps
+
     cfg = get_smoke_config("oasis_7b")
     model = build(cfg)
     corpus = ByteCorpus()
-    print("== warm up the model on repo text (200 steps) so decode is non-trivial")
+    print(f"== warm up the model on repo text ({steps} steps) so decode is non-trivial")
     trainer = Trainer(
         model,
-        TrainConfig(optimizer=AdamWConfig(lr=2e-3), warmup_steps=20, total_steps=200),
+        TrainConfig(optimizer=AdamWConfig(lr=2e-3), warmup_steps=min(20, steps),
+                    total_steps=steps),
         TokenPipeline(corpus.tokens, DataConfig(seq_len=64, global_batch=16, seed=0)),
     )
-    trainer.run(200, log_every=100)
+    trainer.run(steps, log_every=100)
     params = trainer.state["params"]
 
-    print("== quantize: W4A4 K-Means + dynamic outliers (paper serving config)")
-    qcfg = QLinearConfig(detection="dynamic", outlier_frac=0.005)
-    qparams = model.quantize(params, qcfg)
-
-    engine = ServingEngine(
-        model,
-        qparams,
-        ServeConfig(cache_len=128, qconfig=qcfg, kv_quant=True, cache_dtype="float32",
-                    block_size=16, prefill_chunk=16),
-        batch_slots=4,
+    print("== quantize under a per-layer QuantSpec "
+          "(W4A4 + outliers; W8 down-proj; int4 KV)")
+    spec = QuantSpec(
+        base=QLinearConfig(detection="dynamic", outlier_frac=0.005),
+        rules=[("mlp/wd", {"w_bits": 8})],  # precision where accuracy lives
+        kv_bits=4, kv_dtype="float32",
     )
-    prompts_text = ["def quantize(", "import jax", "class Model", "# The paper",
-                    "return x @ w"]
-    prompts = [[b for b in t.encode()] for t in prompts_text]
-    print(f"== serving {len(prompts)} byte-level prompts through {engine.slots} slots "
-          f"(paged={engine.paged}: int4 block pool + continuous batching)")
-    outs = engine.generate(prompts, max_new_tokens=24)
-    for text, toks in zip(prompts_text, outs):
-        cont = bytes(t for t in toks if t < 256).decode(errors="replace")
-        print(f"   {text!r} -> {cont!r}")
-    if engine.paged:
-        st = engine.scheduler.stats
-        print(f"   scheduler: {st['packed_steps']} packed steps "
-              f"({st['mixed_steps']} mixed prefill+decode), "
-              f"{st['prefill_tokens']} prefill tokens in {st['prefill_chunks']} segments, "
-              f"peak pool occupancy {st['peak_occupancy']:.0%}, "
-              f"{st['preemptions']} preemptions")
-    print("OK (quantized weights + activations + int4 paged KV, continuous batching)")
+    qparams = quantize_model(model, params, spec)
+
+    with tempfile.TemporaryDirectory() as artifact_dir:
+        print(f"== save_quantized -> {artifact_dir} (packed npz + JSON manifest)")
+        save_quantized(artifact_dir, cfg, spec, qparams)
+
+        print("== load_quantized (fresh objects; zero calibration on this path)")
+        served_model, served_params, served_spec = load_quantized(artifact_dir)
+
+        engine = ServingEngine(
+            served_model,
+            served_params,
+            ServeConfig.from_spec(served_spec, cache_len=128, block_size=16,
+                                  prefill_chunk=16),
+            batch_slots=4,
+        )
+        prompts_text = ["def quantize(", "import jax", "class Model", "# The paper",
+                        "return x @ w"]
+        prompts = [[b for b in t.encode()] for t in prompts_text]
+        print(f"== serving {len(prompts)} byte-level prompts through {engine.slots} "
+              f"slots (paged={engine.paged}: int4 block pool + continuous batching)")
+        outs = engine.generate(prompts, max_new_tokens=24)
+        for text, toks in zip(prompts_text, outs):
+            cont = bytes(t for t in toks if t < 256).decode(errors="replace")
+            print(f"   {text!r} -> {cont!r}")
+        if engine.paged:
+            st = engine.scheduler.stats
+            print(f"   scheduler: {st['packed_steps']} packed steps "
+                  f"({st['mixed_steps']} mixed prefill+decode), "
+                  f"{st['prefill_tokens']} prefill tokens in {st['prefill_chunks']} segments, "
+                  f"peak pool occupancy {st['peak_occupancy']:.0%}, "
+                  f"{st['preemptions']} preemptions")
+    print("OK (QuantSpec-quantized artifact saved, reloaded, and served: "
+          "W4/W8 weights + A4 activations + int4 paged KV, continuous batching)")
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

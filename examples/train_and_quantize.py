@@ -67,16 +67,21 @@ def main() -> None:
 
     ce_fp = float(eval_step(params, batch)["ce"])
     rows = [("fp32", ce_fp)]
-    from repro.core.qlinear import use_apply_config
+    from repro.core.quantspec import QuantSpec
+    from repro.models.model import quantize_model
 
-    for name, qcfg in [
-        ("rtn_w4a4", QLinearConfig(method="uniform", detection="none")),
-        ("kmeans_w4a4_no_outlier", QLinearConfig(detection="none")),
-        ("oasis_w4a4", QLinearConfig(detection="dynamic", outlier_frac=0.005)),
+    for name, spec in [
+        ("rtn_w4a4", QuantSpec(base=QLinearConfig(method="uniform", detection="none"))),
+        ("kmeans_w4a4_no_outlier", QuantSpec(base=QLinearConfig(detection="none"))),
+        ("oasis_w4a4", QuantSpec(base=QLinearConfig(detection="dynamic",
+                                                    outlier_frac=0.005))),
+        ("oasis_w4a4_w8_down", QuantSpec(
+            base=QLinearConfig(detection="dynamic", outlier_frac=0.005),
+            rules=[("mlp/wd", {"w_bits": 8})])),
     ]:
-        qp = model.quantize(params, qcfg, calib=acts)
-        with use_apply_config(qcfg):
-            rows.append((name, float(eval_step(qp, batch)["ce"])))
+        qp = quantize_model(model, params, spec, calib=acts)
+        # apply-time behaviour rides inside each QLinearParams (spec-resolved)
+        rows.append((name, float(eval_step(qp, batch)["ce"])))
 
     print("\nmethod                     CE      PPL     dCE")
     for name, ce in rows:

@@ -22,6 +22,7 @@ from repro.core.outlier import (
     outlier_residuals,
     static_thresholds,
 )
+from repro.core.artifact import QuantizedArtifact, load_quantized, save_quantized
 from repro.core.qlinear import QLinearConfig, QLinearParams, qlinear_apply, quantize_linear
 from repro.core.quantize import (
     QuantizedActivation,
@@ -35,5 +36,14 @@ from repro.core.quantize import (
     token_scale,
     unpack_int4,
 )
+from repro.core.quantspec import QuantRule, QuantSpec
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+__all__ = [k for k in dir() if not k.startswith("_")] + ["quantize_model"]
+
+
+def __getattr__(name):  # PEP 562: quantize_model lives in repro.models.model
+    if name == "quantize_model":
+        from repro.models.model import quantize_model
+
+        return quantize_model
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

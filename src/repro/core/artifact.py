@@ -1,0 +1,203 @@
+"""Quantized-model artifacts: save once, serve anywhere.
+
+``save_quantized(dir, model_cfg, spec, qparams)`` persists a
+QuantSpec-quantized parameter tree (packed-int4/int8 weights, codebooks,
+scales, fp leaves) plus everything needed to rebuild and serve it:
+
+    <dir>/manifest.json   format version, ModelConfig fields, QuantSpec
+                          (base + rules + kv policy), per-tensor dtype/shape/
+                          sha256, and the tree structure (dict/list/qlinear
+                          nodes with each QLinearParams' resolved QLinearConfig
+                          and QuantizedWeight meta)
+    <dir>/tensors.npz     every array leaf as raw bytes (uint8 views), so any
+                          dtype — including bfloat16 — round-trips bit-exactly
+
+``load_quantized(dir)`` rebuilds the :class:`~repro.models.model.Model` and
+the exact QLinearParams tree in a fresh process with **zero calibration or
+K-Means code on the path** — a serving process loads a prepared artifact and
+serves it instead of re-running PTQ at startup.
+
+Write order is crash-aware: tensors first, ``manifest.json`` last — a
+directory without a manifest is an incomplete save and refuses to load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import QLinearParams
+from repro.core.quantize import QuantizedWeight
+from repro.core.quantspec import QuantSpec, _cfg_from_json, _cfg_to_json
+
+__all__ = ["save_quantized", "load_quantized", "QuantizedArtifact", "FORMAT_VERSION"]
+
+FORMAT_VERSION = 1
+
+
+class QuantizedArtifact(NamedTuple):
+    """What ``load_quantized`` returns (tuple-unpackable)."""
+
+    model: Any  # repro.models.model.Model
+    params: dict
+    spec: QuantSpec
+
+
+# ---------------------------------------------------------------------------
+# dtype round-trip (bfloat16 et al. aren't np.save-serializable as-is)
+# ---------------------------------------------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # ships with jax
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _to_host(leaf) -> np.ndarray:
+    return np.asarray(jax.device_get(leaf))
+
+
+# ---------------------------------------------------------------------------
+# tree <-> (structure json, {tensor name: ndarray})
+# ---------------------------------------------------------------------------
+
+def _flatten(tree, path: str, tensors: dict[str, np.ndarray]):
+    """Returns a JSON-able structure mirror; arrays go into ``tensors``."""
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "items": {k: _flatten(v, f"{path}/{k}" if path else k, tensors)
+                          for k, v in tree.items()}}
+    if isinstance(tree, list):
+        return {"kind": "list",
+                "items": [_flatten(v, f"{path}/{i}", tensors)
+                          for i, v in enumerate(tree)]}
+    if isinstance(tree, QLinearParams):
+        qw = tree.qw
+        node = {
+            "kind": "qlinear",
+            "cfg": _cfg_to_json(tree.cfg),
+            "qw_shape": list(qw.shape),
+            "qw_nbits": qw.nbits,
+            "fields": {},
+        }
+        arrays = {"qw.packed": qw.packed, "qw.codebook": qw.codebook,
+                  "qw.scale": qw.scale, "act_codebook": tree.act_codebook,
+                  "bias": tree.bias, "thr_lo": tree.thr_lo, "thr_hi": tree.thr_hi}
+        for f, v in arrays.items():
+            if v is None:
+                node["fields"][f] = None
+            else:
+                name = f"{path}.{f}"
+                tensors[name] = _to_host(v)
+                node["fields"][f] = name
+        return node
+    if tree is None:
+        return {"kind": "none"}
+    tensors[path] = _to_host(tree)
+    return {"kind": "array", "tensor": path}
+
+
+def _unflatten(node: dict, tensors: dict[str, jnp.ndarray]):
+    kind = node["kind"]
+    if kind == "dict":
+        return {k: _unflatten(v, tensors) for k, v in node["items"].items()}
+    if kind == "list":
+        return [_unflatten(v, tensors) for v in node["items"]]
+    if kind == "qlinear":
+        f = {k: (None if v is None else tensors[v]) for k, v in node["fields"].items()}
+        qw = QuantizedWeight(packed=f["qw.packed"], codebook=f["qw.codebook"],
+                             scale=f["qw.scale"], shape=tuple(node["qw_shape"]),
+                             nbits=node["qw_nbits"])
+        return QLinearParams(qw=qw, act_codebook=f["act_codebook"], bias=f["bias"],
+                             thr_lo=f["thr_lo"], thr_hi=f["thr_hi"],
+                             cfg=_cfg_from_json(node["cfg"]))
+    if kind == "none":
+        return None
+    return tensors[node["tensor"]]
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def save_quantized(directory: str, model_cfg: ModelConfig, spec: QuantSpec,
+                   qparams: dict) -> pathlib.Path:
+    """Persist a quantized model; returns the artifact directory."""
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    # invalidate any PREVIOUS save first: a stale manifest paired with new
+    # tensors would pass the completeness check and misload
+    (d / "manifest.json").unlink(missing_ok=True)
+    tensors: dict[str, np.ndarray] = {}
+    structure = _flatten(qparams, "", tensors)
+
+    # raw-byte views make every dtype (incl. bfloat16) npz-safe + bit-exact;
+    # stream the npz straight to disk (crash safety comes from manifest-last,
+    # not from buffering) and hash the same byte views — one host copy total
+    byte_arrays = {k: np.frombuffer(v.tobytes(), np.uint8) for k, v in tensors.items()}
+    np.savez(d / "tensors.npz", **byte_arrays)
+
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "model": dataclasses.asdict(model_cfg),
+        "spec": spec.to_json_dict(),
+        "structure": structure,
+        "tensors": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "sha256": hashlib.sha256(byte_arrays[k]).hexdigest()[:16]}
+            for k, v in tensors.items()
+        },
+    }
+    # manifest LAST, via rename so it appears atomically (crash -> no manifest
+    # -> load_quantized refuses the incomplete directory)
+    tmp = d / ".manifest.json.tmp"
+    tmp.write_text(json.dumps(manifest, indent=1))
+    tmp.replace(d / "manifest.json")
+    return d
+
+
+def load_quantized(directory: str, verify: bool = True) -> QuantizedArtifact:
+    """Load a saved artifact: (model, qparams, spec), ready to serve.
+
+    No calibration, K-Means fitting, or weight quantization runs here — the
+    tree is reconstructed byte-exact from the npz + manifest.
+    """
+    d = pathlib.Path(directory)
+    mf = d / "manifest.json"
+    if not mf.exists():
+        raise FileNotFoundError(f"{d} has no manifest.json (not an artifact, "
+                                "or an interrupted save)")
+    manifest = json.loads(mf.read_text())
+    if manifest["format_version"] != FORMAT_VERSION:
+        raise ValueError(f"artifact format {manifest['format_version']} != "
+                         f"supported {FORMAT_VERSION}")
+
+    with np.load(d / "tensors.npz") as z:
+        raw = {k: z[k] for k in z.files}
+    tensors: dict[str, jnp.ndarray] = {}
+    for name, meta in manifest["tensors"].items():
+        b = raw[name].tobytes()
+        if verify and hashlib.sha256(b).hexdigest()[:16] != meta["sha256"]:
+            raise IOError(f"artifact corruption detected at tensor {name}")
+        arr = np.frombuffer(b, _np_dtype(meta["dtype"])).reshape(meta["shape"])
+        tensors[name] = jnp.asarray(arr)
+
+    params = _unflatten(manifest["structure"], tensors)
+    spec = QuantSpec.from_json_dict(manifest["spec"])
+    mc = dict(manifest["model"])
+    mc["block_pattern"] = tuple(mc.get("block_pattern", ()))
+    from repro.models.model import build  # late: avoid core<->models import cycle
+
+    model = build(ModelConfig(**mc))
+    return QuantizedArtifact(model=model, params=params, spec=spec)

@@ -28,8 +28,6 @@ __all__ = [
     "QLinearParams",
     "quantize_linear",
     "qlinear_apply",
-    "current_apply_config",
-    "use_apply_config",
 ]
 
 Detection = Literal["dynamic", "static", "static_dense", "none"]
@@ -46,6 +44,7 @@ class QLinearConfig:
     outlier_frac: float = 0.005  # per side; paper default 0.5% + 0.5%
     detection: Detection = "dynamic"  # OASIS='dynamic', OASIS-S='static'
     comp_mode: CompMode = "auto"
+    comp_auto_tokens: int = 64  # comp_mode="auto": gather at <= this many tokens
     scale_mode: qz.ScaleMode = "rms"
     compute_dtype: object = jnp.float32
     use_kernel: bool = False  # route main branch through the Pallas kernel
@@ -54,15 +53,25 @@ class QLinearConfig:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["qw", "act_codebook", "bias", "thr_lo", "thr_hi"],
-    meta_fields=[],
+    meta_fields=["cfg"],
 )
 @dataclasses.dataclass(frozen=True)
 class QLinearParams:
+    """Quantized-linear parameters WITH their resolved apply-time config.
+
+    ``cfg`` is a pytree *meta* field (static under jit): the per-layer
+    :class:`QLinearConfig` a :class:`~repro.core.quantspec.QuantSpec` resolved
+    for this projection. Apply-time behaviour (detection mode, outlier budget,
+    kernel routing) travels with the params — there is no ambient/global
+    apply config.
+    """
+
     qw: qz.QuantizedWeight
     act_codebook: jax.Array  # fp32 (2^a_bits,) offline-learned
     bias: jax.Array | None
     thr_lo: jax.Array | None  # OASIS-S static thresholds (scalars)
     thr_hi: jax.Array | None
+    cfg: QLinearConfig = QLinearConfig()
 
 
 def quantize_linear(
@@ -86,45 +95,30 @@ def quantize_linear(
     thr_lo = thr_hi = None
     if cfg.detection in ("static", "static_dense"):
         thr_lo, thr_hi = ol.static_thresholds(calib_acts, cfg.outlier_frac)
-    return QLinearParams(qw=qw, act_codebook=book, bias=bias, thr_lo=thr_lo, thr_hi=thr_hi)
+    return QLinearParams(qw=qw, act_codebook=book, bias=bias, thr_lo=thr_lo,
+                         thr_hi=thr_hi, cfg=cfg)
 
 
 def _tokens(x: jax.Array) -> int:
     return math.prod(x.shape[:-1]) if x.ndim > 1 else 1
 
 
-# Ambient apply-config: model code calls plain ``dense_apply`` on a tree that
-# may hold QLinearParams; the serving engine selects the quantization behaviour
-# (kernel on/off, detection mode, outlier budget) without threading a config
-# through every layer. Static under jit (baked at trace time).
-import contextlib
-import contextvars
+def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = None) -> jax.Array:
+    """Dual-branch forward (paper Fig. 7). Output dtype follows ``x``.
 
-_APPLY_CFG: contextvars.ContextVar[QLinearConfig] = contextvars.ContextVar(
-    "repro_qlinear_apply_cfg", default=QLinearConfig()
-)
-
-
-def current_apply_config() -> QLinearConfig:
-    return _APPLY_CFG.get()
-
-
-@contextlib.contextmanager
-def use_apply_config(cfg: QLinearConfig):
-    token = _APPLY_CFG.set(cfg)
-    try:
-        yield
-    finally:
-        _APPLY_CFG.reset(token)
-
-
-def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig) -> jax.Array:
-    """Dual-branch forward (paper Fig. 7). Output dtype follows ``x``."""
+    ``cfg`` defaults to the config resolved at quantize time and stored in
+    the params (``p.cfg``); pass one explicitly only to override it for an
+    ablation (quantize-time artifacts — codebook size, static thresholds —
+    obviously cannot be changed after the fact).
+    """
+    cfg = p.cfg if cfg is None else cfg
     out_dtype = x.dtype
     qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
 
     # ---- main branch: look-ahead LUT-GEMM over ALL activations ------------
-    if cfg.use_kernel:
+    if cfg.use_kernel and p.qw.nbits <= 4 and qa.nbits <= 4:
+        # the Pallas kernel speaks nibble-packed int4; wider codebooks
+        # (mixed-precision W8 layers) take the jnp factorized form
         from repro.kernels import ops as kops
 
         y = kops.lut_gemm(qa, p.qw, out_dtype=cfg.compute_dtype)
@@ -158,7 +152,7 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig) -> jax.Arr
         mode = cfg.comp_mode
         if mode == "auto":
             # decode-ish (few tokens): row-gather; prefill-ish: scatter+dense GEMM
-            mode = "gather" if _tokens(x) <= 64 else "scatter"
+            mode = "gather" if _tokens(x) <= cfg.comp_auto_tokens else "scatter"
         comp = (
             ol.compensate_gather(r, outs, p.qw, cfg.compute_dtype)
             if mode == "gather"

@@ -81,9 +81,10 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
 class QuantizedWeight:
     """K-Means-quantized weight matrix of logical shape ``shape = (K, N)``.
 
-    packed   : uint8 (K, N//2) — two 4-bit codebook indices per byte
-               (3-bit codebooks still use nibble packing; the wasted bit is
-               accounted for in benchmarks).
+    packed   : uint8. nbits <= 4: (K, N//2) — two 4-bit codebook indices per
+               byte (3-bit codebooks still use nibble packing; the wasted bit
+               is accounted for in benchmarks). nbits in (5..8] — the
+               mixed-precision W8 tier — stores one index per byte, (K, N).
     codebook : fp32 (2^nbits,) — sorted centroids, shared by the whole matrix.
     scale    : fp32 (N,)       — per-output-channel scale.
     """
@@ -97,11 +98,14 @@ class QuantizedWeight:
     @property
     def indices(self) -> jax.Array:
         """Unpacked int32 index matrix, shape ``(K, N)``."""
-        return unpack_int4(self.packed)
+        if self.nbits <= 4:
+            return unpack_int4(self.packed)
+        return self.packed.astype(jnp.int32)
 
     def hbm_bytes(self) -> int:
         k, n = self.shape
-        return k * n // 2 + self.codebook.size * 4 + n * 4
+        idx_bytes = k * n // 2 if self.nbits <= 4 else k * n
+        return idx_bytes + self.codebook.size * 4 + n * 4
 
 
 @partial(
@@ -141,6 +145,8 @@ def quantize_weight(w: jax.Array, nbits: int = 4, iters: int = 25,
     an RTN-style evenly spaced grid (the INT-WAQ baseline of Table III).
     """
     k, n = w.shape
+    if nbits > 8:
+        raise ValueError(f"weight codebooks top out at 8 bits, got {nbits}")
     scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-12)  # (N,)
     wn = (w / scale[None, :]).astype(jnp.float32)
     if method == "kmeans":
@@ -150,10 +156,14 @@ def quantize_weight(w: jax.Array, nbits: int = 4, iters: int = 25,
     else:
         raise ValueError(method)
     idx = cb.assign_via_boundaries(wn, book)
-    if n % 2:
-        raise ValueError("N must be even to nibble-pack along output channels")
+    if nbits <= 4:
+        if n % 2:
+            raise ValueError("N must be even to nibble-pack along output channels")
+        packed = pack_int4(idx)
+    else:  # 5..8 bits: one index per byte
+        packed = idx.astype(jnp.uint8)
     return QuantizedWeight(
-        packed=pack_int4(idx), codebook=book, scale=scale.astype(jnp.float32),
+        packed=packed, codebook=book, scale=scale.astype(jnp.float32),
         shape=(k, n), nbits=nbits,
     )
 

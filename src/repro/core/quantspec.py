@@ -1,0 +1,177 @@
+"""QuantSpec: declarative per-layer quantization policy.
+
+A spec is an ordered list of ``(path-glob pattern -> QLinearConfig
+overrides)`` rules resolved against each quantizable projection's parameter
+path during ``quantize_model``. This is what lets the repo express what the
+quantization literature says matters — per-layer / per-projection precision
+and outlier budgets (SKIM: any-bit per-layer assignment; FineQuant:
+per-matrix granularity) — instead of one global config baked into every
+layer.
+
+Paths are ``/``-separated parameter-tree paths, e.g. ``blocks/attn/wq`` or
+``blocks/3/mlp/wd`` for unscanned stacks. Patterns use ``fnmatch`` globs and
+match either the full path or any trailing sub-path, so ``attn/*`` matches
+``blocks/attn/wq`` and ``mlp/wd`` matches ``blocks/7/mlp/wd``.
+
+Resolution semantics (**later rules win**):
+
+* start from ``spec.base`` (a plain :class:`QLinearConfig`);
+* walk the rules in order; every rule whose pattern matches the path is
+  applied — ``"skip"`` marks the layer *dense* (left as fp), a dict of
+  overrides un-skips it and updates the running config;
+* the final state is the layer's resolved config (or ``None`` = keep dense).
+
+KV-cache treatment is a first-class spec field (``kv_bits`` / ``kv_dtype``)
+rather than a per-layer rule: the cache pool is one global allocation shared
+by the serving scheduler, not a per-projection decision.
+
+Scan-stacked models (``cfg.scan_layers=True``) share one path per projection
+(``blocks/attn/wq`` covers every layer in the stack), so per-layer-index
+rules like ``blocks/0/*`` require ``scan_layers=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from fnmatch import fnmatchcase
+from typing import Any, Iterable, Mapping, Union
+
+import jax.numpy as jnp
+
+from repro.core.qlinear import QLinearConfig
+
+__all__ = ["QuantRule", "QuantSpec"]
+
+_CFG_FIELDS = {f.name for f in dataclasses.fields(QLinearConfig)}
+
+# "skip" sentinel accepted wherever a rule's overrides go
+RuleLike = Union["QuantRule", tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRule:
+    """One policy rule: ``pattern`` glob -> config overrides or skip.
+
+    ``overrides`` is stored as a sorted tuple of (field, value) pairs so the
+    rule (and the spec) stays hashable; build rules through :class:`QuantSpec`
+    with plain dicts.
+    """
+
+    pattern: str
+    overrides: tuple = ()
+    skip: bool = False
+
+    def __post_init__(self):
+        bad = [k for k, _ in self.overrides if k not in _CFG_FIELDS]
+        if bad:
+            raise ValueError(
+                f"rule {self.pattern!r}: unknown QLinearConfig field(s) {bad}; "
+                f"valid: {sorted(_CFG_FIELDS)}"
+            )
+        if self.skip and self.overrides:
+            raise ValueError(f"rule {self.pattern!r}: 'skip' takes no overrides")
+
+    def matches(self, path: str) -> bool:
+        return fnmatchcase(path, self.pattern) or fnmatchcase(path, "*/" + self.pattern)
+
+
+def _as_rule(r: RuleLike) -> QuantRule:
+    if isinstance(r, QuantRule):
+        return r
+    pattern, body = r
+    if isinstance(body, str):
+        if body != "skip":
+            raise ValueError(f"rule {pattern!r}: string body must be 'skip', got {body!r}")
+        return QuantRule(pattern=pattern, skip=True)
+    if isinstance(body, Mapping):
+        return QuantRule(pattern=pattern, overrides=tuple(sorted(body.items())))
+    raise TypeError(f"rule {pattern!r}: body must be 'skip' or a dict of overrides")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Declarative quantization policy for a whole model.
+
+    >>> spec = QuantSpec(
+    ...     base=QLinearConfig(w_bits=4, a_bits=4),
+    ...     rules=[("mlp/wd", {"w_bits": 8, "outlier_frac": 0.01}),
+    ...            ("attn/wo", "skip")],
+    ...     kv_bits=4,
+    ... )
+
+    ``kv_bits``: None = fp KV cache at ``kv_dtype``; 4 = K-Means int4 blocks.
+    """
+
+    base: QLinearConfig = QLinearConfig()
+    rules: tuple = ()
+    kv_bits: int | None = None
+    kv_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(_as_rule(r) for r in self.rules))
+        if self.kv_bits not in (None, 4):
+            raise ValueError(f"kv_bits must be None or 4 (K-Means int4), got {self.kv_bits}")
+
+    # ------------------------------------------------------------- resolution
+    def resolve(self, path: str) -> QLinearConfig | None:
+        """Resolved config for the projection at ``path`` (None = keep dense).
+
+        ``path`` uses ``/`` separators (``quantize_model`` normalizes the
+        parameter-tree path before calling this).
+        """
+        cfg, skip = self.base, False
+        for rule in self.rules:
+            if not rule.matches(path):
+                continue
+            if rule.skip:
+                skip = True
+            else:
+                skip = False
+                cfg = dataclasses.replace(cfg, **dict(rule.overrides))
+        return None if skip else cfg
+
+    # ---------------------------------------------------------- serialization
+    def to_json_dict(self) -> dict:
+        return {
+            "base": _cfg_to_json(self.base),
+            "rules": [
+                {"pattern": r.pattern, "skip": r.skip, "overrides": _vals_to_json(r.overrides)}
+                for r in self.rules
+            ],
+            "kv_bits": self.kv_bits,
+            "kv_dtype": self.kv_dtype,
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "QuantSpec":
+        rules = tuple(
+            QuantRule(
+                pattern=r["pattern"],
+                skip=r.get("skip", False),
+                overrides=tuple(sorted(_vals_from_json(r.get("overrides", {})).items())),
+            )
+            for r in d.get("rules", [])
+        )
+        return cls(base=_cfg_from_json(d["base"]), rules=rules,
+                   kv_bits=d.get("kv_bits"), kv_dtype=d.get("kv_dtype", "bfloat16"))
+
+
+# ---------------------------------------------------------------------------
+# QLinearConfig <-> JSON (compute_dtype is a dtype object; store its name)
+# ---------------------------------------------------------------------------
+
+def _vals_to_json(items: Iterable[tuple[str, Any]] | Mapping) -> dict:
+    items = items.items() if isinstance(items, Mapping) else items
+    return {k: (jnp.dtype(v).name if k == "compute_dtype" else v) for k, v in items}
+
+
+def _vals_from_json(d: Mapping) -> dict:
+    return {k: (jnp.dtype(v) if k == "compute_dtype" else v) for k, v in d.items()}
+
+
+def _cfg_to_json(cfg: QLinearConfig) -> dict:
+    return _vals_to_json(dataclasses.asdict(cfg))
+
+
+def _cfg_from_json(d: Mapping) -> QLinearConfig:
+    return QLinearConfig(**_vals_from_json(d))

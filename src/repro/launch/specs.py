@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
 from repro.core.qlinear import QLinearConfig
+from repro.core.quantspec import QuantSpec
 from repro.distributed.param_sharding import build_cache_specs, build_param_specs
 from repro.launch.mesh import MODEL_AXIS_SIZE, batch_axes_for
 from repro.models.model import build, quantize_params
@@ -173,16 +174,18 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     # dynamic is more accurate). prefill: OASIS-S static thresholds with
     # dense masked compensation — full sorts over 32k-token activations cost
     # ~70 GB/device of workspace (EXPERIMENTS §Perf P1).
-    qcfg = QLinearConfig(
+    spec = QuantSpec(base=QLinearConfig(
         outlier_frac=0.005,
         detection="dynamic" if shape.kind == "decode" else "static_dense",
         compute_dtype=jnp.dtype(cfg.compute_dtype),
-    )
-    sc = ServeConfig(cache_len=shape.seq_len, qconfig=qcfg, kv_quant=kv_quant,
+    ))
+    sc = ServeConfig(cache_len=shape.seq_len, kv_quant=kv_quant,
                      quantized=quantized_serving)
     params_shapes = jax.eval_shape(partial(model.init, key))
     if quantized_serving:
-        params_shapes = jax.eval_shape(partial(quantize_params, qcfg=qcfg), params_shapes)
+        # the resolved config rides in each QLinearParams meta field, so the
+        # lowered step needs no apply-time quantization plumbing
+        params_shapes = jax.eval_shape(partial(quantize_params, spec=spec), params_shapes)
     cache_dt = jnp.dtype("bfloat16")
     caches_shapes = jax.eval_shape(
         partial(model.init_caches, shape.global_batch, shape.seq_len, cache_dt, kv_quant)

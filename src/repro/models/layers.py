@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import calibration
-from repro.core.qlinear import QLinearParams, current_apply_config, qlinear_apply
+from repro.core.qlinear import QLinearParams, qlinear_apply
 from repro.distributed.sharding import constrain
 
 __all__ = [
@@ -60,11 +60,15 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale: flo
 
 
 def dense_apply(p, x: jax.Array, tap_name: str | None = None) -> jax.Array:
-    """fp or quantized projection; taps activations during calibration."""
+    """fp or quantized projection; taps activations during calibration.
+
+    QLinearParams carry their own resolved apply config (``p.cfg``, set by
+    the QuantSpec at quantize time) — no ambient configuration is consulted.
+    """
     if tap_name is not None and not isinstance(x, jax.core.Tracer):
         x = calibration.tap(tap_name, x)
     if isinstance(p, QLinearParams):
-        return qlinear_apply(p, x, current_apply_config())
+        return qlinear_apply(p, x)
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)

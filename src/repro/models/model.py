@@ -6,15 +6,22 @@
     out                  = model.apply(params, batch)                 # train/prefill
     out                  = model.apply(params, batch, caches=...)     # decode
     caches               = model.init_caches(batch_size, cache_len)
-    qparams              = model.quantize(params, calib, qcfg)        # PTQ -> QLinearParams tree
+    qparams              = quantize_model(model, params, spec, calib) # PTQ -> QLinearParams tree
 
 ``out`` is a :class:`ModelOutput` (logits, caches, aux_loss). ``batch`` is a
 dict with "tokens" (B, S) and, for the VLM family, "image_embeds".
+
+Quantization is policy-driven: ``quantize_model`` resolves a declarative
+:class:`~repro.core.quantspec.QuantSpec` (ordered path-glob rules) to a
+concrete per-projection :class:`QLinearConfig`, which is stored INSIDE each
+produced :class:`QLinearParams` — apply-time behaviour travels with the
+params, there is no ambient/global apply config.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -23,10 +30,11 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QLinearConfig, QLinearParams
 from repro.core.quantize import fit_activation_codebook, quantize_weight
+from repro.core.quantspec import QuantSpec
 from repro.models import mamba, moe, multimodal, rglru, transformer
 
-__all__ = ["Model", "ModelOutput", "build", "quantize_params", "unstack_for_capture",
-           "head_matrix"]
+__all__ = ["Model", "ModelOutput", "build", "quantize_model", "quantize_params",
+           "unstack_for_capture", "head_matrix"]
 
 _FAMILY_MODULES = {
     "dense": transformer,
@@ -92,8 +100,22 @@ class Model:
             return ModelOutput(None, caches_out, aux, hidden=val)
         return ModelOutput(val, caches_out, aux)
 
-    def quantize(self, params, qcfg: QLinearConfig, calib: dict | None = None) -> dict:
-        return quantize_params(params, qcfg, calib)
+    def quantize(self, params, qcfg, calib: dict | None = None) -> dict:
+        """DEPRECATED shim: one global config == a rule-free QuantSpec.
+
+        Use ``quantize_model(model, params, spec, calib)`` with a
+        :class:`~repro.core.quantspec.QuantSpec` instead — it expresses
+        per-layer precision/outlier budgets and skip rules this method can't.
+        Kept for one release so existing callers keep working.
+        """
+        if isinstance(qcfg, QuantSpec):  # forward politely, no warning
+            return quantize_model(self, params, qcfg, calib)
+        warnings.warn(
+            "Model.quantize(params, qcfg) is deprecated; use "
+            "quantize_model(model, params, QuantSpec(base=qcfg), calib)",
+            DeprecationWarning, stacklevel=2,
+        )
+        return quantize_model(self, params, QuantSpec(base=qcfg), calib)
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -130,14 +152,27 @@ def unstack_for_capture(model: Model, params):
 # ---------------------------------------------------------------------------
 
 # Keys whose 'w' leaves are the paper-quantizable projections. Router weights,
-# norms, embeddings and the lm head stay fp (paper: norms/softmax fp16;
-# router is tiny and accuracy-critical).
+# norms, embeddings and the lm head stay fp REGARDLESS of the spec (paper:
+# norms/softmax fp16; router is tiny and accuracy-critical) — the spec decides
+# which of the eligible projections are quantized and how.
 _QUANT_KEYS = {
     "wq", "wk", "wv", "wo", "wi", "wd",
     "in_proj", "x_proj", "dt_proj", "out_proj",
     "lin_y", "lin_x", "lin_out", "w_a", "w_x",
 }
 _SKIP_KEYS = {"router", "head", "embed", "shared_gate"}
+
+# param leaf key -> calibration tap name(s) it feeds (see dense_apply's
+# tap_name plumbing in models/*.py). Cross-attention q/o taps are "cross.*";
+# the path carries "cross" for those blocks, handled in _tap_candidates.
+_TAP_OF = {
+    "wq": ("attn.q",), "wk": ("attn.k",), "wv": ("attn.v",), "wo": ("attn.o",),
+    "wi": ("mlp.wi",), "wd": ("mlp.wd",),
+    "in_proj": ("mamba.in_proj",), "x_proj": ("mamba.x_proj",),
+    "dt_proj": ("mamba.dt_proj",), "out_proj": ("mamba.out_proj",),
+    "lin_y": ("rec.lin_y",), "lin_x": ("rec.lin_x",), "lin_out": ("rec.lin_out",),
+    "w_a": ("rglru.wa",), "w_x": ("rglru.wx",),
+}
 
 
 def _default_codebook(nbits: int, method: str = "kmeans") -> jax.Array:
@@ -152,49 +187,89 @@ def _default_codebook(nbits: int, method: str = "kmeans") -> jax.Array:
     return _norm.ppf(qs).astype(jnp.float32)
 
 
-def quantize_params(params, qcfg: QLinearConfig, calib: dict | None = None, path: str = ""):
-    """Recursively replace quantizable fp linears with QLinearParams.
+def quantize_model(model: Model, params, spec: QuantSpec,
+                   calib: dict | None = None) -> dict:
+    """PTQ a whole model under a declarative per-layer policy.
+
+    ``spec`` is a :class:`~repro.core.quantspec.QuantSpec`: ordered
+    ``(path-glob -> QLinearConfig overrides | skip)`` rules resolved against
+    each quantizable projection's parameter path (e.g. ``blocks/attn/wq``).
+    The resolved config is stored inside each produced
+    :class:`QLinearParams`, so the returned tree is self-describing — serve
+    it directly, or persist it with ``repro.core.artifact.save_quantized``.
 
     ``calib``: optional {tap_name: (tokens, K) activations} from
-    ``core.calibration.capture`` — when provided, activation codebooks are
-    learned per layer; otherwise the structural gaussian codebook is used.
-    Works on stacked (scan) params via vmap.
+    ``core.calibration.capture`` — when provided, activation codebooks (and
+    OASIS-S static thresholds) are learned per projection; otherwise the
+    structural gaussian codebook is used.
     """
+    # the param tree itself carries the structure the rules match against;
+    # the model is used to catch params/model mix-ups before a shape error
+    # surfaces deep inside apply
+    expect = {"embed"}
+    expect |= {"self_blocks", "cross_blocks"} if model.cfg.family == "vlm" else {"blocks"}
+    if not model.cfg.tie_embeddings:
+        expect |= {"head"}
+    missing = expect - set(params)
+    if missing:
+        raise ValueError(
+            f"params are missing {sorted(missing)} — not a parameter tree of "
+            f"{model.cfg.arch_id} (family {model.cfg.family})"
+        )
+    return quantize_params(params, spec, calib)
+
+
+def quantize_params(params, spec, calib: dict | None = None, path: str = ""):
+    """Recursively replace quantizable fp linears with QLinearParams.
+
+    ``spec`` may be a :class:`QuantSpec` or (backward compat) a bare
+    :class:`QLinearConfig`, which behaves as a rule-free spec. Projections a
+    rule resolves to ``skip`` keep their fp weight dict. Works on stacked
+    (scan) params via vmap — note stacked projections share one path
+    (``blocks/attn/wq``), so per-layer-index rules need scan_layers=False.
+    """
+    if isinstance(spec, QLinearConfig):
+        spec = QuantSpec(base=spec)
     if isinstance(params, list):
-        return [quantize_params(p, qcfg, calib, f"{path}[{i}]") for i, p in enumerate(params)]
+        return [quantize_params(p, spec, calib, f"{path}/{i}" if path else str(i))
+                for i, p in enumerate(params)]
     if not isinstance(params, dict):
         return params
     out = {}
     for k, v in params.items():
-        sub = f"{path}.{k}" if path else k
+        sub = f"{path}/{k}" if path else k
         if k in _SKIP_KEYS:
             out[k] = v
         elif k in _QUANT_KEYS and isinstance(v, dict) and "w" in v:
-            out[k] = _quantize_one(v, qcfg, calib, sub)
+            cfg = spec.resolve(sub)
+            out[k] = v if cfg is None else _quantize_one(v, cfg, calib, sub)
         elif isinstance(v, (dict, list)):
-            out[k] = quantize_params(v, qcfg, calib, sub)
+            out[k] = quantize_params(v, spec, calib, sub)
         else:
             out[k] = v
     return out
 
 
-def _quantize_one(p: dict, qcfg: QLinearConfig, calib: dict | None, path: str):
+def _quantize_one(p: dict, cfg: QLinearConfig, calib: dict | None, path: str):
+    """Quantize one projection under its RESOLVED config (stored in the
+    result's ``cfg`` meta field, so apply needs no outside configuration)."""
     w = p["w"]
     bias = p.get("b")
 
     def one(w2d, b1d):
-        qw = quantize_weight(w2d.astype(jnp.float32), nbits=qcfg.w_bits, method=qcfg.method)
-        book = _codebook_for(path, w2d.shape[0], qcfg, calib)
+        qw = quantize_weight(w2d.astype(jnp.float32), nbits=cfg.w_bits, method=cfg.method)
+        book = _codebook_for(path, cfg, calib)
         thr_lo = thr_hi = None
-        if qcfg.detection in ("static", "static_dense"):
+        if cfg.detection in ("static", "static_dense"):
             acts = _calib_for(path, calib)
             if acts is not None:
                 from repro.core.outlier import static_thresholds
 
-                thr_lo, thr_hi = static_thresholds(acts, qcfg.outlier_frac)
+                thr_lo, thr_hi = static_thresholds(acts, cfg.outlier_frac)
             else:
                 thr_lo, thr_hi = jnp.float32(-3.0), jnp.float32(3.0)
-        return QLinearParams(qw=qw, act_codebook=book, bias=b1d, thr_lo=thr_lo, thr_hi=thr_hi)
+        return QLinearParams(qw=qw, act_codebook=book, bias=b1d, thr_lo=thr_lo,
+                             thr_hi=thr_hi, cfg=cfg)
 
     if w.ndim < 2:
         raise ValueError(f"unexpected weight rank {w.ndim} at {path}")
@@ -210,19 +285,38 @@ def _quantize_one(p: dict, qcfg: QLinearConfig, calib: dict | None, path: str):
     return fn(w, bias)
 
 
+def _tap_candidates(path: str) -> tuple[str, ...]:
+    """Calibration tap names that feed the projection at ``path``."""
+    leaf = path.rsplit("/", 1)[-1]
+    taps = _TAP_OF.get(leaf, (leaf,))
+    if "cross" in path:  # vlm cross-attn blocks tap under layer_tag="cross"
+        taps = tuple(t.replace("attn.", "cross.") for t in taps) + taps
+    return taps
+
+
 def _calib_for(path: str, calib: dict | None):
+    """Captured activations for the projection at ``path``, or None.
+
+    Tap names are projection-scoped ("attn.q", "mlp.wd", ...), not
+    path-scoped: scanned stacks capture one pooled tensor per projection.
+    Exact tap-name match first, then suffix match (unrolled captures may
+    prefix names).
+    """
     if not calib:
         return None
-    leaf = path.split(".")[-1].split("[")[0]
-    for name, acts in calib.items():
-        if name.endswith(leaf) or leaf in name:
-            return acts
+    for tap in _tap_candidates(path):
+        if tap in calib:
+            return calib[tap]
+    for tap in _tap_candidates(path):
+        for name, acts in calib.items():
+            if name.endswith(tap):
+                return acts
     return None
 
 
-def _codebook_for(path: str, k_dim: int, qcfg: QLinearConfig, calib: dict | None):
+def _codebook_for(path: str, cfg: QLinearConfig, calib: dict | None):
     acts = _calib_for(path, calib)
     if acts is not None:
-        return fit_activation_codebook(acts, nbits=qcfg.a_bits,
-                                       scale_mode=qcfg.scale_mode, method=qcfg.method)
-    return _default_codebook(qcfg.a_bits, qcfg.method)
+        return fit_activation_codebook(acts, nbits=cfg.a_bits,
+                                       scale_mode=cfg.scale_mode, method=cfg.method)
+    return _default_codebook(cfg.a_bits, cfg.method)

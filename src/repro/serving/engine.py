@@ -15,10 +15,15 @@ cache of the shape-specified length). ``ServingEngine`` wraps generation:
   masked out of attention via a per-row ``pad_len`` on the ring caches.
 
 The quantization story end-to-end:
-  weights    : K-Means W4 (QLinearParams tree)        — paper §III-A
+  weights    : K-Means W4/W8 per QuantSpec rule (QLinearParams tree, each
+               carrying its resolved QLinearConfig)   — paper §III-A
   activations: K-Means A4/A3 per token + outliers     — paper §III-A/C
   KV cache   : optional K-Means int4 (beyond-paper)   — DESIGN.md §2,
                ring buffer AND paged block pool (serving/README.md)
+
+Apply-time quantization behaviour lives INSIDE the params (see
+repro.core.quantspec): the engine no longer carries a quantization config —
+build it from a spec's KV policy with ``ServeConfig.from_spec(spec, ...)``.
 """
 
 from __future__ import annotations
@@ -29,7 +34,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import QLinearConfig, use_apply_config
+from repro.core.quantspec import QuantSpec
 from repro.models.model import Model
 
 __all__ = ["ServeConfig", "make_prefill_step", "make_serve_step", "ServingEngine"]
@@ -41,7 +46,6 @@ class ServeConfig:
     cache_dtype: str = "bfloat16"
     kv_quant: bool = False
     temperature: float = 0.0  # 0 => greedy
-    qconfig: QLinearConfig = QLinearConfig()
     quantized: bool = True  # serve QLinearParams (False = fp baseline)
     # paged continuous-batching scheduler (attention-cache families)
     paged: bool = True  # False forces the fixed-slot ring-buffer path
@@ -50,6 +54,14 @@ class ServeConfig:
     prefill_chunk: int = 32  # prefill share of the default token budget
     token_budget: int = 0  # packed-step rows; 0 -> slots + prefill_chunk
 
+    @classmethod
+    def from_spec(cls, spec: QuantSpec, **kw) -> "ServeConfig":
+        """Serving config whose KV-cache treatment follows the spec's
+        first-class kv policy (kv_bits -> int4 pool, kv_dtype -> fp pool)."""
+        kw.setdefault("kv_quant", spec.kv_bits is not None)
+        kw.setdefault("cache_dtype", spec.kv_dtype)
+        return cls(**kw)
+
 
 def make_prefill_step(model: Model, sc: ServeConfig) -> Callable:
     """prefill(params, caches, batch) -> (first_token (B,), caches, logits)."""
@@ -57,9 +69,8 @@ def make_prefill_step(model: Model, sc: ServeConfig) -> Callable:
     def prefill(params, caches, batch: dict):
         s = batch["tokens"].shape[1]
         positions = jnp.arange(s, dtype=jnp.int32)
-        with use_apply_config(sc.qconfig):
-            out = model.apply(params, batch, positions=positions, caches=caches,
-                              last_only=True)
+        out = model.apply(params, batch, positions=positions, caches=caches,
+                          last_only=True)
         next_tok = jnp.argmax(out.logits[:, -1, : model.cfg.vocab_size], axis=-1)
         return next_tok.astype(jnp.int32), out.caches, out.logits[:, -1]
 
@@ -83,8 +94,7 @@ def make_serve_step(model: Model, sc: ServeConfig) -> Callable:
                 (tokens.shape[0], model.cfg.n_img_tokens, model.cfg.d_model),
                 jnp.dtype(model.cfg.compute_dtype),
             )
-        with use_apply_config(sc.qconfig):
-            out = model.apply(params, batch, positions=positions, caches=caches)
+        out = model.apply(params, batch, positions=positions, caches=caches)
         logits = out.logits[:, -1, : model.cfg.vocab_size]
         next_tok = jnp.argmax(logits, axis=-1)
         return next_tok.astype(jnp.int32), out.caches, logits

@@ -45,7 +45,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qlinear import use_apply_config
 from repro.serving.paged_cache import (
     BlockAllocator,
     PagedCacheConfig,
@@ -140,7 +139,7 @@ class Scheduler:
 
     # ------------------------------------------------------------------ jit
     def _make_packed_step(self):
-        model, sc = self.model, self.sc
+        model = self.model
 
         def packed_step(params, pools, bt, slot_ids, positions, ctx, tokens):
             """The unified token-budget forward: tokens/positions/ctx/slot_ids
@@ -151,9 +150,8 @@ class Scheduler:
             next-token logits (T, vocab)."""
             caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
                                    model.cfg.scan_layers, token_slots=slot_ids)
-            with use_apply_config(sc.qconfig):
-                out = model.apply(params, {"tokens": tokens[:, None]},
-                                  positions=positions[:, None], caches=caches)
+            out = model.apply(params, {"tokens": tokens[:, None]},
+                              positions=positions[:, None], caches=caches)
             return detach_tables(out.caches), out.logits[:, 0, : model.cfg.vocab_size]
 
         return packed_step

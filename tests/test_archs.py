@@ -88,8 +88,11 @@ def test_incremental_decode_matches_full(arch, smoke_models):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_quantized_forward(arch, smoke_models):
+    from repro.core.quantspec import QuantSpec
+    from repro.models.model import quantize_model
+
     cfg, m, params = smoke_models[arch]
-    qp = m.quantize(params, QLinearConfig(outlier_frac=0.01))
+    qp = quantize_model(m, params, QuantSpec(base=QLinearConfig(outlier_frac=0.01)))
     out = m.apply(qp, _batch(cfg))
     assert bool(jnp.isfinite(out.logits).all())
 

@@ -1,0 +1,293 @@
+"""QuantSpec API tests: per-layer rule resolution (later rules win, skip
+leaves a layer dense), config-in-params apply behaviour (comp_auto_tokens
+cutover), the quantized-model artifact layer (bit-exact save/load round trip,
+calibration-free load path), mixed-precision serving end-to-end, and the
+Model.quantize deprecation shim."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.artifact import load_quantized, save_quantized
+from repro.core.qlinear import QLinearConfig, QLinearParams, qlinear_apply, quantize_linear
+from repro.core.quantspec import QuantRule, QuantSpec
+from repro.models.model import build, quantize_model
+from repro.serving.engine import ServeConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_smoke_config("llama3_2_1b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+MIXED = QuantSpec(
+    base=QLinearConfig(detection="none"),
+    rules=[("mlp/wd", {"w_bits": 8})],  # W8 down-proj, W4 elsewhere
+    kv_dtype="float32",
+)
+
+
+# ---------------------------------------------------------------------------
+# rule resolution
+# ---------------------------------------------------------------------------
+
+def test_rule_precedence_later_wins():
+    spec = QuantSpec(
+        base=QLinearConfig(w_bits=4, detection="none"),
+        rules=[
+            ("attn/*", {"w_bits": 3}),
+            ("attn/wq", {"w_bits": 8, "outlier_frac": 0.02}),
+            ("mlp/*", "skip"),
+            ("mlp/wi", {"a_bits": 3}),  # un-skips wi, wd stays dense
+        ],
+    )
+    assert spec.resolve("blocks/attn/wq").w_bits == 8
+    assert spec.resolve("blocks/attn/wq").outlier_frac == 0.02
+    assert spec.resolve("blocks/attn/wk").w_bits == 3
+    assert spec.resolve("blocks/mlp/wd") is None  # skip
+    assert spec.resolve("blocks/mlp/wi").a_bits == 3  # later rule un-skips
+    assert spec.resolve("blocks/mlp/wi").w_bits == 4  # base preserved
+
+
+def test_rule_suffix_matching_and_layer_index():
+    spec = QuantSpec(rules=[("blocks/0/*", "skip"), ("wd", {"w_bits": 8})])
+    assert spec.resolve("blocks/0/attn/wq") is None  # per-index rule (unscanned)
+    assert spec.resolve("blocks/1/attn/wq") is not None
+    assert spec.resolve("blocks/1/mlp/wd").w_bits == 8  # bare-leaf suffix match
+
+
+def test_rule_rejects_unknown_field_and_bad_body():
+    with pytest.raises(ValueError, match="unknown QLinearConfig field"):
+        QuantSpec(rules=[("attn/*", {"bits": 4})])
+    with pytest.raises(ValueError, match="skip"):
+        QuantSpec(rules=[("attn/*", "dense")])
+    with pytest.raises(ValueError, match="kv_bits"):
+        QuantSpec(kv_bits=8)
+
+
+def test_spec_json_roundtrip():
+    spec = QuantSpec(
+        base=QLinearConfig(w_bits=4, a_bits=3, detection="static",
+                           compute_dtype=jnp.float32),
+        rules=[("mlp/wd", {"w_bits": 8, "compute_dtype": jnp.float32}),
+               ("attn/wo", "skip")],
+        kv_bits=4, kv_dtype="float32",
+    )
+    back = QuantSpec.from_json_dict(spec.to_json_dict())
+    assert back.base == dataclasses.replace(spec.base,
+                                            compute_dtype=jnp.dtype("float32"))
+    assert back.kv_bits == 4 and back.kv_dtype == "float32"
+    assert [r.pattern for r in back.rules] == ["mlp/wd", "attn/wo"]
+    assert back.rules[1].skip
+    assert back.resolve("blocks/mlp/wd").w_bits == 8
+
+
+def test_quantize_model_applies_rules(small_lm):
+    cfg, model, params = small_lm
+    spec = QuantSpec(base=QLinearConfig(detection="none"),
+                     rules=[("mlp/wd", {"w_bits": 8}), ("attn/wo", "skip")])
+    qp = quantize_model(model, params, spec)
+    blk = qp["blocks"]
+    assert isinstance(blk["attn"]["wo"], dict), "skip must leave the layer dense"
+    assert isinstance(blk["mlp"]["wd"], QLinearParams)
+    assert blk["mlp"]["wd"].qw.nbits == 8
+    assert blk["mlp"]["wd"].cfg.w_bits == 8  # resolved cfg travels with params
+    assert blk["attn"]["wq"].qw.nbits == 4
+    # head / embed never quantized regardless of spec
+    assert isinstance(qp["embed"], dict)
+
+
+# ---------------------------------------------------------------------------
+# W8 weight tier (byte packing)
+# ---------------------------------------------------------------------------
+
+def test_w8_weights_pack_bytewise_and_beat_w4():
+    from repro.core.quantize import dequantize_weight, quantize_weight
+
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    q4, q8 = quantize_weight(w, nbits=4), quantize_weight(w, nbits=8)
+    assert q4.packed.shape == (64, 16) and q8.packed.shape == (64, 32)
+    assert q8.codebook.shape == (256,)
+    e4 = float(jnp.linalg.norm(dequantize_weight(q4) - w))
+    e8 = float(jnp.linalg.norm(dequantize_weight(q8) - w))
+    assert e8 < e4 / 4, (e4, e8)
+    assert q8.hbm_bytes() > q4.hbm_bytes()  # honest byte accounting
+
+
+# ---------------------------------------------------------------------------
+# comp_mode="auto" cutover (satellite: configurable gather/scatter boundary)
+# ---------------------------------------------------------------------------
+
+def test_comp_auto_tokens_cutover_both_sides(monkeypatch):
+    import repro.core.outlier as ol
+
+    calls = []
+    real_g, real_s = ol.compensate_gather, ol.compensate_scatter
+    monkeypatch.setattr(ol, "compensate_gather",
+                        lambda *a, **k: calls.append("gather") or real_g(*a, **k))
+    monkeypatch.setattr(ol, "compensate_scatter",
+                        lambda *a, **k: calls.append("scatter") or real_s(*a, **k))
+
+    cfg = QLinearConfig(detection="dynamic", outlier_frac=0.05, comp_auto_tokens=4)
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16)) * 0.5
+    calib = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+    p = quantize_linear(w, calib, cfg)
+    assert p.cfg.comp_auto_tokens == 4
+
+    x_at = jax.random.normal(jax.random.PRNGKey(2), (4, 32))  # == boundary
+    x_above = jax.random.normal(jax.random.PRNGKey(3), (5, 32))  # boundary + 1
+    y_at, y_above = qlinear_apply(p, x_at), qlinear_apply(p, x_above)
+    assert calls == ["gather", "scatter"], calls
+    # both routes compute the same compensation (numerics-level equivalence)
+    np.testing.assert_allclose(
+        np.asarray(y_at), np.asarray(qlinear_apply(
+            p, x_at, dataclasses.replace(cfg, comp_mode="scatter"))),
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y_above), np.asarray(qlinear_apply(
+            p, x_above, dataclasses.replace(cfg, comp_mode="gather"))),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# artifact round trip
+# ---------------------------------------------------------------------------
+
+def _packed_leaves(tree, out=None):
+    out = [] if out is None else out
+    if isinstance(tree, dict):
+        for v in tree.values():
+            _packed_leaves(v, out)
+    elif isinstance(tree, list):
+        for v in tree:
+            _packed_leaves(v, out)
+    elif isinstance(tree, QLinearParams):
+        out.append(np.asarray(tree.qw.packed))
+    return out
+
+
+def test_artifact_roundtrip_bitexact(small_lm, tmp_path):
+    cfg, model, params = small_lm
+    qp = quantize_model(model, params, MIXED)
+    save_quantized(tmp_path / "art", cfg, MIXED, qp)
+    art = load_quantized(tmp_path / "art")
+
+    assert art.model.cfg == cfg
+    assert art.spec == MIXED
+    # identical packed bytes...
+    a, b = _packed_leaves(qp), _packed_leaves(art.params)
+    assert len(a) == len(b) > 0
+    for x, y in zip(a, b):
+        assert x.dtype == y.dtype and x.tobytes() == y.tobytes()
+    # ...and identical logits
+    batch = {"tokens": jnp.arange(6, dtype=jnp.int32)[None] % cfg.vocab_size}
+    la = model.apply(qp, batch).logits
+    lb = art.model.apply(art.params, batch).logits
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_artifact_detects_corruption_and_partial_saves(small_lm, tmp_path):
+    cfg, model, params = small_lm
+    qp = quantize_model(model, params, MIXED)
+    d = save_quantized(tmp_path / "art", cfg, MIXED, qp)
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        load_quantized(tmp_path / "nowhere")
+    # flip one tensor byte -> sha mismatch
+    import json
+
+    mf = json.loads((d / "manifest.json").read_text())
+    name = next(k for k in mf["tensors"] if k.endswith("qw.packed"))
+    mf["tensors"][name]["sha256"] = "0" * 16
+    (d / "manifest.json").write_text(json.dumps(mf))
+    with pytest.raises(IOError, match="corruption"):
+        load_quantized(d)
+    assert load_quantized(d, verify=False) is not None  # escape hatch
+
+
+def test_load_path_runs_no_calibration_and_serves_identically(
+        small_lm, tmp_path, monkeypatch):
+    """Acceptance: a saved W4A4(+W8) model reloaded in a 'fresh process'
+    produces token-identical greedy output through ServingEngine.generate vs
+    the in-process quantized model, with quantization/calibration entry
+    points poisoned during load + serve."""
+    cfg, model, params = small_lm
+    qp = quantize_model(model, params, MIXED)
+    prompts = [[1, 2, 3, 4, 5], [7, 8], [9]]
+    mk = lambda m, p: ServingEngine(
+        m, p, ServeConfig.from_spec(MIXED, cache_len=32, block_size=4,
+                                    prefill_chunk=4), batch_slots=2)
+    want = mk(model, qp).generate(prompts, max_new_tokens=6)
+
+    save_quantized(tmp_path / "art", cfg, MIXED, qp)
+
+    def boom(*a, **k):
+        raise AssertionError("calibration/quantization code ran on the load path")
+
+    import repro.core.codebook as codebook
+    import repro.models.model as mm
+    monkeypatch.setattr(codebook, "kmeans_fit", boom)
+    monkeypatch.setattr(mm, "quantize_weight", boom)
+    monkeypatch.setattr(mm, "fit_activation_codebook", boom)
+    monkeypatch.setattr(mm, "quantize_params", boom)
+
+    art = load_quantized(tmp_path / "art")
+    got = mk(art.model, art.params).generate(prompts, max_new_tokens=6)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision serving end-to-end
+# ---------------------------------------------------------------------------
+
+def test_mixed_precision_serving_paged_matches_ring(small_lm):
+    """W8 down-proj + W4 elsewhere through ServingEngine.generate: the paged
+    continuous-batching path and the ring fallback agree token-for-token."""
+    cfg, model, params = small_lm
+    qp = quantize_model(model, params, MIXED)
+    assert qp["blocks"]["mlp"]["wd"].qw.nbits == 8
+    assert qp["blocks"]["attn"]["wq"].qw.nbits == 4
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8]]
+    paged = ServingEngine(model, qp,
+                          ServeConfig.from_spec(MIXED, cache_len=32, block_size=4,
+                                                prefill_chunk=4), batch_slots=2)
+    ring = ServingEngine(model, qp,
+                         ServeConfig.from_spec(MIXED, cache_len=32, paged=False),
+                         batch_slots=1)
+    want = [ring.generate([p], max_new_tokens=5)[0] for p in prompts]
+    assert paged.generate(prompts, max_new_tokens=5) == want
+
+
+def test_serve_config_from_spec_kv_policy():
+    sc = ServeConfig.from_spec(QuantSpec(kv_bits=4, kv_dtype="float32"), cache_len=64)
+    assert sc.kv_quant and sc.cache_dtype == "float32" and sc.cache_len == 64
+    sc2 = ServeConfig.from_spec(QuantSpec(), kv_quant=True)  # explicit kw wins
+    assert sc2.kv_quant and sc2.cache_dtype == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_model_quantize_shim_warns_and_matches_spec(small_lm):
+    cfg, model, params = small_lm
+    qcfg = QLinearConfig(detection="none")
+    with pytest.warns(DeprecationWarning, match="quantize_model"):
+        a = model.quantize(params, qcfg)
+    b = quantize_model(model, params, QuantSpec(base=qcfg))
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # passing a QuantSpec through the old entry point forwards silently
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        model.quantize(params, QuantSpec(base=qcfg))

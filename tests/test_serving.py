@@ -14,12 +14,13 @@ import pytest
 
 from repro.configs.base import get_smoke_config
 from repro.core.qlinear import QLinearConfig
+from repro.core.quantspec import QuantSpec
 from repro.models import layers as L
-from repro.models.model import build
+from repro.models.model import build, quantize_model
 from repro.serving.engine import ServeConfig, ServingEngine, make_serve_step
 from repro.serving.paged_cache import BlockAllocator, attach_tables, detach_tables
 
-QCFG = QLinearConfig(detection="none")
+QSPEC = QuantSpec(base=QLinearConfig(detection="none"))
 
 
 @pytest.fixture(scope="module")
@@ -27,7 +28,7 @@ def small_lm():
     cfg = get_smoke_config("llama3_2_1b")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params, model.quantize(params, QCFG)
+    return cfg, model, params, quantize_model(model, params, QSPEC)
 
 
 # ---------------------------------------------------------------------------
@@ -161,10 +162,10 @@ def test_paged_engine_matches_ring_engine_greedy(small_lm):
     time), bf16->f32 cache, greedy."""
     cfg, model, params, qp = small_lm
     prompts = [[1, 2, 3], [4, 5], [6], [7, 8, 9, 10], [11, 12]]
-    ring = ServingEngine(model, qp, ServeConfig(cache_len=64, qconfig=QCFG,
+    ring = ServingEngine(model, qp, ServeConfig(cache_len=64,
                                                 cache_dtype="float32", paged=False),
                          batch_slots=4)
-    paged = ServingEngine(model, qp, ServeConfig(cache_len=64, qconfig=QCFG,
+    paged = ServingEngine(model, qp, ServeConfig(cache_len=64,
                                                  cache_dtype="float32", block_size=8,
                                                  prefill_chunk=4),
                           batch_slots=4)
@@ -180,7 +181,7 @@ def test_paged_int4_matches_ring_int4(small_lm):
     prompts = [[1, 2, 3, 4, 5], [6, 9], [7, 8, 9, 10]]
     mk = lambda paged: ServingEngine(
         model, qp,
-        ServeConfig(cache_len=32, qconfig=QCFG, cache_dtype="float32",
+        ServeConfig(cache_len=32, cache_dtype="float32",
                     kv_quant=True, paged=paged, block_size=4, prefill_chunk=4),
         batch_slots=3,
     )
@@ -201,14 +202,14 @@ def test_packed_mixed_traffic_matches_sequential_reference(small_lm):
     prompts = [[(7 * i + j) % cfg.vocab_size or 1 for j in range(n)]
                for i, n in enumerate([13, 2, 9, 5, 1, 17, 4])]
     budgets = [5, 8, 3, 6, 2, 4, 7]
-    ring = ServingEngine(model, qp, ServeConfig(cache_len=64, qconfig=QCFG,
+    ring = ServingEngine(model, qp, ServeConfig(cache_len=64,
                                                 cache_dtype="float32", paged=False),
                          batch_slots=1)
     want = {i: ring.generate([p], max_new_tokens=b)[0]
             for i, (p, b) in enumerate(zip(prompts, budgets))}
 
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=64, qconfig=QCFG,
+                        ServeConfig(cache_len=64,
                                     cache_dtype="float32", block_size=8,
                                     prefill_chunk=4, token_budget=8),
                         batch_slots=3)
@@ -235,7 +236,7 @@ def test_packed_budget_decode_never_starved(small_lm):
     exactly one token per step (decode rows are reserved before prefill)."""
     cfg, model, params, qp = small_lm
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=64, qconfig=QCFG,
+                        ServeConfig(cache_len=64,
                                     cache_dtype="float32", block_size=8,
                                     prefill_chunk=4, token_budget=6),
                         batch_slots=3)
@@ -262,7 +263,7 @@ def test_packed_step_rejects_budget_below_slots(small_lm):
     cfg, model, params, qp = small_lm
     with pytest.raises(ValueError, match="token_budget"):
         ServingEngine(model, qp,
-                      ServeConfig(cache_len=32, qconfig=QCFG,
+                      ServeConfig(cache_len=32,
                                   cache_dtype="float32", token_budget=2),
                       batch_slots=4)
 
@@ -273,7 +274,7 @@ def test_fallback_padding_not_attended(small_lm):
     generation must match unpadded per-prompt generation."""
     cfg, model, params, qp = small_lm
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=32, qconfig=QCFG,
+                        ServeConfig(cache_len=32,
                                     cache_dtype="float32", paged=False),
                         batch_slots=4)
     prompts = [[1, 2, 3, 4, 5, 6, 7], [4, 5], [6], [7, 8, 9, 10]]
@@ -287,7 +288,7 @@ def test_scheduler_queue_overflow_and_slot_refill(small_lm):
     admission, not recursive chunking) with per-request budgets."""
     cfg, model, params, qp = small_lm
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=32, qconfig=QCFG,
+                        ServeConfig(cache_len=32,
                                     cache_dtype="float32", block_size=4),
                         batch_slots=2)
     prompts = [[i + 1, i + 2] for i in range(7)]
@@ -305,7 +306,7 @@ def test_scheduler_prefill_only_burst(small_lm):
     (regression: this used to trip the pool-capacity error)."""
     cfg, model, params, qp = small_lm
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=16, qconfig=QCFG,
+                        ServeConfig(cache_len=16,
                                     cache_dtype="float32", block_size=4),
                         batch_slots=2)
     outs = eng.generate([[i + 1] for i in range(5)], max_new_tokens=1)
@@ -319,7 +320,7 @@ def test_scheduler_preemption_is_deterministic(small_lm):
     prompts = [[1, 2, 3, 4, 5, 6, 7], [4, 5], [6, 9, 1], [7, 8, 9, 10]]
     mk = lambda n_blocks: ServingEngine(
         model, qp,
-        ServeConfig(cache_len=32, qconfig=QCFG, cache_dtype="float32",
+        ServeConfig(cache_len=32, cache_dtype="float32",
                     block_size=4, prefill_chunk=4, n_blocks=n_blocks),
         batch_slots=3,
     )
@@ -334,7 +335,7 @@ def test_scheduler_preemption_is_deterministic(small_lm):
 def test_scheduler_rejects_oversized_request(small_lm):
     cfg, model, params, qp = small_lm
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=16, qconfig=QCFG,
+                        ServeConfig(cache_len=16,
                                     cache_dtype="float32", block_size=4),
                         batch_slots=2)
     with pytest.raises(ValueError, match="exceeds"):
@@ -346,7 +347,7 @@ def test_engine_eos_padding_both_paths(small_lm):
     cfg, model, params, qp = small_lm
     for paged in (True, False):
         eng = ServingEngine(model, qp,
-                            ServeConfig(cache_len=32, qconfig=QCFG,
+                            ServeConfig(cache_len=32,
                                         cache_dtype="float32", paged=paged),
                             batch_slots=2)
         outs = eng.generate([[1, 2, 3], [5, 6]], max_new_tokens=6, eos_id=0)
@@ -362,7 +363,7 @@ def test_temperature_sampling_seed_reproducible(small_lm):
     cfg, model, params, qp = small_lm
     for paged in (True, False):
         eng = ServingEngine(model, qp,
-                            ServeConfig(cache_len=32, qconfig=QCFG,
+                            ServeConfig(cache_len=32,
                                         cache_dtype="float32", temperature=1.0,
                                         paged=paged),
                             batch_slots=2)
@@ -376,7 +377,7 @@ def test_serve_step_returns_current_logits(small_lm):
     """The stale-logits fix: make_serve_step's logits are THIS step's
     distribution (match a direct model.apply at the same position)."""
     cfg, model, params, _ = small_lm
-    sc = ServeConfig(cache_len=16, qconfig=QCFG, cache_dtype="float32")
+    sc = ServeConfig(cache_len=16, cache_dtype="float32")
     step = make_serve_step(model, sc)
     caches = model.init_caches(2, sc.cache_len, jnp.float32)
     toks = jax.random.randint(jax.random.PRNGKey(7), (2, 1), 0, cfg.vocab_size)
@@ -396,7 +397,7 @@ def test_block_allocator_zero_alloc_and_empty_prompt(small_lm):
     assert a.alloc(0) == [] and a.n_free == 4
     cfg, model, params, qp = small_lm
     eng = ServingEngine(model, qp,
-                        ServeConfig(cache_len=16, qconfig=QCFG,
+                        ServeConfig(cache_len=16,
                                     cache_dtype="float32", block_size=4),
                         batch_slots=2)
     with pytest.raises(ValueError, match="empty prompt"):
@@ -555,7 +556,7 @@ def test_packed_scheduler_through_kernel(small_lm, monkeypatch):
     cfg, model, params, qp = small_lm
     mk = lambda: ServingEngine(
         model, qp,
-        ServeConfig(cache_len=32, qconfig=QCFG, cache_dtype="float32",
+        ServeConfig(cache_len=32, cache_dtype="float32",
                     block_size=4, prefill_chunk=2, token_budget=4),
         batch_slots=2,
     )

@@ -26,7 +26,8 @@ from repro.distributed.fault_tolerance import (
     elastic_plan,
     find_resumable_step,
 )
-from repro.models.model import build
+from repro.core.quantspec import QuantSpec
+from repro.models.model import build, quantize_model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 from repro.serving.engine import ServeConfig, ServingEngine
 
@@ -257,9 +258,8 @@ def test_serving_engine_batched_generation():
     cfg = get_smoke_config("oasis_7b")
     m = build(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    qp = m.quantize(params, QLinearConfig(outlier_frac=0.01))
-    sc = ServeConfig(cache_len=64, qconfig=QLinearConfig(outlier_frac=0.01),
-                     cache_dtype="float32")
+    qp = quantize_model(m, params, QuantSpec(base=QLinearConfig(outlier_frac=0.01)))
+    sc = ServeConfig(cache_len=64, cache_dtype="float32")
     eng = ServingEngine(m, qp, sc, batch_slots=4)
     prompts = [[1, 2, 3], [4, 5], [6], [7, 8, 9, 10], [11, 12]]  # > slots: chunks
     outs = eng.generate(prompts, max_new_tokens=6)
@@ -271,9 +271,9 @@ def test_serving_greedy_deterministic():
     cfg = get_smoke_config("llama3_2_1b")
     m = build(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    sc = ServeConfig(cache_len=64, qconfig=QLinearConfig(detection="none"),
-                     cache_dtype="float32")
-    eng = ServingEngine(m, m.quantize(params, sc.qconfig), sc, batch_slots=2)
+    sc = ServeConfig(cache_len=64, cache_dtype="float32")
+    qp = quantize_model(m, params, QuantSpec(base=QLinearConfig(detection="none")))
+    eng = ServingEngine(m, qp, sc, batch_slots=2)
     a = eng.generate([[1, 2, 3]], max_new_tokens=5)
     b = eng.generate([[1, 2, 3]], max_new_tokens=5)
     assert a == b

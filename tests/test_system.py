@@ -47,13 +47,14 @@ def test_ptq_quality_ordering(trained_small_lm):
     batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
     ce_fp = float(eval_step(params, batch)["ce"])
 
-    from repro.core.qlinear import use_apply_config
+    from repro.core.quantspec import QuantSpec
+    from repro.models.model import quantize_model
 
     def ce_with(qcfg):
-        qp = model.quantize(params, qcfg)
-        with use_apply_config(qcfg):
-            step = jax.jit(make_eval_step(model, tc))
-            return float(step(qp, batch)["ce"])
+        # apply-time behaviour travels inside the QLinearParams (p.cfg)
+        qp = quantize_model(model, params, QuantSpec(base=qcfg))
+        step = jax.jit(make_eval_step(model, tc))
+        return float(step(qp, batch)["ce"])
 
     ce_oasis = ce_with(QLinearConfig(detection="dynamic", outlier_frac=0.01))
     ce_no_outlier = ce_with(QLinearConfig(detection="none"))
