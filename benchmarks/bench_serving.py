@@ -20,7 +20,17 @@ completion latency, peak block-pool occupancy, preemption count, and the
 mixed-step share (packed steps serving prefill AND decode together — the
 quantity that was zero when prefill serialized at batch=1).
 
-``--smoke`` (or run(smoke=True)) shrinks the trace for CI.
+A second, deterministic **shared-system-prompt phase** measures prefix
+sharing: one leader prefills a multi-block system prompt, then a mixed
+wave of followers (most sharing the prefix, some unrelated) is served
+twice — prefix cache on vs off. It reports ``prefix_hit_tokens`` (tokens
+aliased from cached blocks), ``prefill_skipped`` (prefill compute avoided),
+COW copies and cached-prefix evictions, asserts the two runs are
+token-identical, and asserts prefill tokens computed drop by at least the
+shared full-block fraction.
+
+``--smoke`` (or run(smoke=True)) shrinks both traces for CI; the smoke run
+still asserts ``prefix_hit_tokens > 0`` (the prefix-sharing CI gate).
 """
 
 from __future__ import annotations
@@ -64,6 +74,41 @@ def make_trace(vocab: int, seed: int = 0, n_requests: int = N_REQUESTS,
     arrivals = np.cumsum(rng.exponential(MEAN_INTERARRIVAL_S, n_requests))
     return [Trace(list(rng.randint(1, vocab, n)), int(b), float(t))
             for n, b, t in zip(lens, budgets, arrivals)]
+
+
+def make_shared_trace(vocab: int, prefix_len: int, n_requests: int,
+                      tail_range: tuple[int, int], seed: int = 1,
+                      shared_frac: float = 0.75):
+    """Shared-system-prompt mix: request 0 (the leader) and ~shared_frac of
+    the rest start with one common ``prefix_len``-token system prompt; the
+    others are unrelated. Returns (traces, is_shared flags)."""
+    rng = np.random.RandomState(seed)
+    prefix = list(rng.randint(1, vocab, prefix_len))
+    traces, shared = [], []
+    for i in range(n_requests):
+        tail = list(rng.randint(1, vocab, rng.randint(*tail_range)))
+        is_shared = i == 0 or rng.rand() < shared_frac
+        prompt = prefix + tail if is_shared else \
+            list(rng.randint(1, vocab, prefix_len // 2 + len(tail)))
+        traces.append(Trace(prompt, int(rng.randint(4, 13)), 0.0))
+        shared.append(is_shared)
+    return traces, shared
+
+
+def run_shared_prefix(eng: ServingEngine, trace: list[Trace]):
+    """Deterministic warm-cache driver: serve the leader until it decodes
+    (its prefix blocks are then registered), then submit the follower wave
+    and drain. Returns ({rid: tokens}, elapsed seconds)."""
+    sched = eng.scheduler
+    results: dict[int, list[int]] = {}
+    t0 = time.perf_counter()
+    lead = sched.submit(trace[0].prompt, trace[0].budget)
+    while not any(r.rid == lead and r.decoding for r in sched._running):
+        sched.step(results)
+    for t in trace[1:]:
+        sched.submit(t.prompt, t.budget)
+    results.update(sched.run())
+    return results, time.perf_counter() - t0
 
 
 def _percentiles(lat: list[float]) -> tuple[float, float]:
@@ -160,6 +205,48 @@ def run(smoke: bool = False) -> None:
           f"budget_util={st['packed_tokens'] / (steps * budget):.2f} "
           f"avg_decode_rows={st['decode_slot_tokens'] / steps:.2f}")
 
+    # ---- shared-system-prompt phase: prefix sharing on vs off -------------
+    block_size = 16
+    prefix_blocks = 4
+    n_shared_req = 6 if smoke else 16
+    tail_range = (8, 32) if smoke else (8, 96)
+    shared_trace, shared_flags = make_shared_trace(
+        cfg.vocab_size, prefix_blocks * block_size, n_shared_req, tail_range)
+    shared_cache_len = max(len(t.prompt) for t in shared_trace) + 13 + block_size
+    mk_shared = lambda pc: ServingEngine(
+        model, qparams,
+        ServeConfig.from_spec(spec, cache_len=shared_cache_len,
+                              block_size=block_size, prefill_chunk=64,
+                              prefix_cache=pc),
+        batch_slots=SLOTS)
+    on = mk_shared(True)
+    got_on, dt_on = run_shared_prefix(on, shared_trace)
+    off = mk_shared(False)
+    got_off, dt_off = run_shared_prefix(off, shared_trace)
+    assert got_on == got_off, "prefix sharing changed greedy outputs"
+    st_on, st_off = on.stats, off.stats
+    total_prompt = sum(len(t.prompt) for t in shared_trace)
+    followers = sum(shared_flags) - 1  # every sharer after the leader hits
+    expected_skip = followers * prefix_blocks * block_size
+    assert st_on["prefix_hit_tokens"] >= expected_skip > 0, (
+        f"prefix hits {st_on['prefix_hit_tokens']} < expected {expected_skip}"
+    )
+    # acceptance: prefill compute drops by >= the shared full-block fraction
+    assert st_on["prefill_tokens"] <= st_off["prefill_tokens"] - expected_skip, (
+        f"prefill computed {st_on['prefill_tokens']} vs {st_off['prefill_tokens']}"
+        f" without sharing: expected a reduction of >= {expected_skip}"
+    )
+    print(f"prefix,{sum(t.budget for t in shared_trace) / dt_on:.1f},-,-,"
+          f"prefix_hit_tokens={st_on['prefix_hit_tokens']} "
+          f"prefill_skipped={st_on['prefill_skipped']} "
+          f"prefill_tokens={st_on['prefill_tokens']} (off={st_off['prefill_tokens']}) "
+          f"cow_copies={st_on['cow_copies']} "
+          f"prefix_evictions={st_on['prefix_evictions']}")
+    emit("serving_prefix_hit_tokens", 0.0,
+         f"{st_on['prefix_hit_tokens']} tokens aliased / {st_on['prefill_skipped']} "
+         f"prefill skipped of {total_prompt} prompt tokens "
+         f"({followers}/{n_shared_req - 1} followers shared {prefix_blocks} blocks)")
+
     emit("serving_paged_vs_ring_tokens_s", 0.0,
          f"speedup={paged_tps / ring_tps:.2f}x (paged {paged_tps:.1f} vs ring {ring_tps:.1f} tok/s)")
     emit("serving_paged_p95_latency_s", p95q * 1e6, f"ring_p95={p95:.2f}s")
@@ -179,6 +266,19 @@ def run(smoke: bool = False) -> None:
            peak_occupancy=round(st["peak_occupancy"], 3),
            budget_util=round(st["packed_tokens"] / (steps * budget), 3),
            config=bench_cfg)
+    record("serving_prefix",
+           prefix_hit_tokens=st_on["prefix_hit_tokens"],
+           prefill_skipped=st_on["prefill_skipped"],
+           prefill_tokens=st_on["prefill_tokens"],
+           prefill_tokens_no_sharing=st_off["prefill_tokens"],
+           total_prompt_tokens=total_prompt,
+           prefix_hits=st_on["prefix_hits"], cow_copies=st_on["cow_copies"],
+           prefix_evictions=st_on["prefix_evictions"],
+           shared_requests=sum(shared_flags), n_requests=n_shared_req,
+           elapsed_on_s=round(dt_on, 2), elapsed_off_s=round(dt_off, 2),
+           config={"smoke": smoke, "prefix_blocks": prefix_blocks,
+                   "block_size": block_size, "tail_range": list(tail_range),
+                   "slots": SLOTS, "token_identical_vs_off": True})
     # Wall-clock assertions only on the full trace: the 8-request --smoke run
     # on a shared CI box is timing-noise territory (the smoke still gates
     # functional regressions by running the whole path; the deterministic

@@ -8,8 +8,10 @@ cache of the shape-specified length). ``ServingEngine`` wraps generation:
   the **paged continuous-batching scheduler** (serving/scheduler.py) — a
   global K-Means-quantizable block pool, per-request block tables, ONE
   packed token-budget step per iteration mixing prefill and decode tokens,
-  per-step slot refill and preemption-by-eviction. Overflow beyond
-  ``batch_slots`` queues; it is NOT recursively chunked.
+  per-step slot refill, preemption-by-eviction, and refcounted
+  **prefix-sharing** of content-hashed blocks with copy-on-write
+  (``ServeConfig.prefix_cache``). Overflow beyond ``batch_slots`` queues;
+  it is NOT recursively chunked.
 * other families (ssm/hybrid/vlm, SWA archs) fall back to the fixed-slot
   ring-buffer batcher, iterating slot-sized batches; left-pad tokens are
   masked out of attention via a per-row ``pad_len`` on the ring caches.
@@ -53,6 +55,11 @@ class ServeConfig:
     n_blocks: int = 0  # pool size per layer; 0 -> slots * ceil(cache_len/block_size)
     prefill_chunk: int = 32  # prefill share of the default token budget
     token_budget: int = 0  # packed-step rows; 0 -> slots + prefill_chunk
+    # prefix sharing: refcounted content-hashed blocks — admissions alias a
+    # prompt's longest cached full-block prefix (prefill skipped for those
+    # tokens) with copy-on-write on shared partial blocks; token-identical
+    # to prefix_cache=False on greedy decode (serving/README.md)
+    prefix_cache: bool = True
 
     @classmethod
     def from_spec(cls, spec: QuantSpec, **kw) -> "ServeConfig":
@@ -142,6 +149,18 @@ class ServingEngine:
             self.scheduler = None
             self._prefill = jax.jit(make_prefill_step(model, sc))
             self._step = jax.jit(make_serve_step(model, sc))
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters. Paged path: the scheduler's dict (packed-step /
+        preemption accounting plus prefix-cache hits, tokens of prefill
+        skipped, copy-on-write copies, and cached-prefix evictions). The
+        fixed-slot fallback keeps no counters (empty dict)."""
+        if self.scheduler is None:
+            return {}
+        return dict(self.scheduler.stats,
+                    prefix_evictions=self.scheduler.allocator.evictions,
+                    prefix_blocks_cached=self.scheduler.allocator.n_cached)
 
     def generate(
         self, prompts: list[list[int]], max_new_tokens: int | list[int] = 32,

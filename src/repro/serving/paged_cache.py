@@ -17,17 +17,33 @@ so prefill (batch=1) and batched decode share it functionally.
 The allocator is deliberately host-side Python (vLLM-style): block churn is
 a few ints per step and per-request bookkeeping (alloc on growth, free on
 finish/preemption) is control flow the scheduler owns anyway.
+
+Blocks are **refcounted** so one physical block can back the same token
+prefix in many requests (prefix sharing): ``alloc`` hands out blocks at
+refcount 1, ``incref`` adds an alias, ``free`` decrements and only recycles
+at refcount 0. A *full* block whose content hash has been ``register``-ed
+is not recycled immediately when its refcount drops to 0 — it parks in an
+LRU of cached prefix blocks, stays matchable via ``lookup``, and is only
+evicted (hash unregistered, returned to the free list) when ``alloc`` runs
+out of truly-free blocks. Content identity is the **chain hash** of
+(pool/layer-set/quant-policy seed, token ids of every block up to and
+including this one) — see ``prefix_seed`` / ``chain_hash``; identical chain
+hash implies an identical token prefix, and deterministic K-Means writes
+make the stored KV bit-identical, so aliasing is exact, not approximate.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["PagedCacheConfig", "BlockAllocator", "attach_tables", "detach_tables",
-           "blocks_needed"]
+           "blocks_needed", "chain_hash", "prefix_seed", "copy_blocks"]
 
 _TABLE_KEYS = ("block_tables", "ctx_lens", "token_slots")
 
@@ -49,34 +65,167 @@ def blocks_needed(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
 
 
-class BlockAllocator:
-    """Free-list allocator over the pool's block ids (all layers share ids:
-    logical block b maps to pool slot b in every layer's pool)."""
+def prefix_seed(**pool_identity) -> bytes:
+    """Root of the chain hash: two pools share prefix blocks only if their
+    layer-set and quantization policy agree (the scheduler seeds with model
+    family / layer count / KV geometry / kv_quant / cache dtype / block
+    size), so a hash can never alias blocks with incompatible contents."""
+    rep = repr(sorted(pool_identity.items())).encode()
+    return hashlib.blake2b(rep, digest_size=16).digest()
 
-    def __init__(self, n_blocks: int):
+
+def chain_hash(parent: bytes, tokens) -> bytes:
+    """Hash of one full block's identity: parent chain hash (covering every
+    earlier token) + this block's token ids. KV at position p depends on ALL
+    tokens <= p, which is exactly what the chain covers."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent)
+    h.update(np.asarray(list(tokens), np.int64).tobytes())
+    return h.digest()
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over the pool's block ids (all layers
+    share ids: logical block b maps to pool slot b in every layer's pool).
+
+    A block is in exactly one of three states:
+
+      free    refcount 0, on the free list, contents meaningless
+      live    refcount >= 1 (one ref per holding request)
+      cached  refcount 0 but ``register``-ed under a prefix hash: parked in
+              an LRU, still returned by ``lookup`` (revive via ``incref``),
+              evicted oldest-first when ``alloc`` needs the space
+
+    ``n_free`` counts *allocatable* blocks (free + cached): admission
+    decisions must see cached prefixes as reclaimable, or a warm cache would
+    refuse traffic it can serve.
+    """
+
+    def __init__(self, n_blocks: int, prefix_cache: bool = False):
         self.n_blocks = n_blocks
+        self.prefix_cache = prefix_cache
+        self.evictions = 0  # cached prefix blocks reclaimed under pressure
         self._free = list(range(n_blocks - 1, -1, -1))
+        self._ref = [0] * n_blocks
+        self._hash_to_block: dict[bytes, int] = {}
+        self._block_hash: dict[int, bytes] = {}
+        self._lru: OrderedDict[int, None] = OrderedDict()  # oldest first
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free + cached (evictable) prefix blocks."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._lru)
 
     @property
     def occupancy(self) -> float:
-        return 1.0 - len(self._free) / self.n_blocks
+        """Fraction of blocks held live (cached prefixes are reclaimable)."""
+        return 1.0 - self.n_free / self.n_blocks
+
+    def refcount(self, block_id: int) -> int:
+        return self._ref[block_id]
 
     def alloc(self, n: int) -> list[int] | None:
-        """n block ids, or None (allocation is all-or-nothing)."""
+        """n block ids at refcount 1, or None (allocation is all-or-nothing).
+        Evicts cached prefix blocks (oldest first) only when the free list
+        alone cannot cover the request."""
         if n <= 0:  # n=0 must NOT slice the whole free list ([-0:] == [:])
             return []
-        if n > len(self._free):
+        if n > self.n_free:
             return None
+        while len(self._free) < n:
+            self._evict_one()
         got = self._free[-n:][::-1]
         del self._free[len(self._free) - n:]
+        for b in got:
+            self._ref[b] = 1
         return got
 
     def free(self, ids: list[int]) -> None:
-        self._free.extend(reversed(ids))
+        """Drop one reference per id. The whole list is validated BEFORE any
+        mutation — an out-of-range, already-free, or over-duplicated id
+        raises and leaves the pool untouched (a silent double-free later
+        hands one block to two requests; a partial decref on error would let
+        a retry of the same list do the same)."""
+        counts: dict[int, int] = {}
+        for b in ids:
+            if not isinstance(b, (int, np.integer)) or not 0 <= b < self.n_blocks:
+                raise ValueError(
+                    f"free of block {b!r}: out of range for pool of {self.n_blocks}"
+                )
+            counts[b] = counts.get(b, 0) + 1
+        for b, c in counts.items():
+            if self._ref[b] < c:
+                raise ValueError(
+                    f"free of block {b}: {c} frees but {self._ref[b]} refs "
+                    "held (double free?)"
+                )
+        for b in ids:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                if b in self._block_hash:  # registered prefix: park, matchable
+                    self._lru[b] = None
+                    self._lru.move_to_end(b)
+                else:
+                    self._free.append(b)
+
+    def incref(self, block_id: int) -> None:
+        """Add an alias to a live or cached block (never to a free one)."""
+        if self._ref[block_id] == 0:
+            if block_id not in self._lru:
+                raise ValueError(f"incref of free block {block_id}")
+            del self._lru[block_id]  # revive from the cached LRU
+        self._ref[block_id] += 1
+
+    def register(self, prefix_hash: bytes, block_id: int) -> bool:
+        """Publish a live full block under its chain hash (first writer wins:
+        a concurrent duplicate simply stays private and frees normally)."""
+        if not self.prefix_cache:
+            return False
+        if self._ref[block_id] <= 0:
+            raise ValueError(f"register of non-live block {block_id}")
+        if prefix_hash in self._hash_to_block:
+            return False
+        if block_id in self._block_hash:
+            raise ValueError(f"block {block_id} already registered")
+        self._hash_to_block[prefix_hash] = block_id
+        self._block_hash[block_id] = prefix_hash
+        return True
+
+    def lookup(self, prefix_hash: bytes) -> int | None:
+        return self._hash_to_block.get(prefix_hash)
+
+    def _evict_one(self) -> None:
+        bid, _ = self._lru.popitem(last=False)  # oldest cached prefix block
+        del self._hash_to_block[self._block_hash.pop(bid)]
+        self._free.append(bid)
+        self.evictions += 1
+
+
+def copy_blocks(pools, src: jax.Array, dst: jax.Array):
+    """Device-side block copy across every layer's pool arrays (the
+    copy-on-write primitive): pool rows ``src[i]`` overwrite rows ``dst[i]``
+    in every ``pages_*`` leaf. Scanned pools are a dict with a leading L
+    axis (blocks on axis 1); unscanned pools are a list of per-layer dicts
+    (blocks on axis 0). Returns the updated pool tree."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(layer, blocks_axis):
+        out = {}
+        for k, v in layer.items():
+            if k.startswith("pages_"):
+                v = (v.at[:, dst].set(v[:, src]) if blocks_axis == 1
+                     else v.at[dst].set(v[src]))
+            out[k] = v
+        return out
+
+    if isinstance(pools, dict):
+        return cp(pools, 1)
+    return [cp(layer, 0) for layer in pools]
 
 
 def attach_tables(pools, block_tables: jax.Array, ctx_lens: jax.Array,

@@ -22,11 +22,26 @@ attention. There is no separate prefill function and no batch=1 serial
 admission phase: prefill/decode interference is gone by construction, and a
 step's cost is always exactly ``token_budget`` tokens.
 
+**Prefix sharing** (``ServeConfig.prefix_cache``): as prefill fills a block
+completely, the scheduler registers it with the allocator under the chain
+hash of (pool identity, every token up to the block's end). Admission then
+matches an incoming prompt's longest cached full-block prefix, increfs and
+aliases those physical blocks into the new request's table, and sets
+``prefilled`` past the shared tokens — their prefill compute is skipped
+entirely; only the tail gets fresh blocks. Writes into a block whose
+refcount exceeds 1 (the aliased-last-block case when a prompt is an exact
+multiple of block_size) are **copy-on-write**: the block's pool rows are
+copied device-side across all layers into a fresh block and the table entry
+swapped before the packed step, so ``attention_apply`` and the Pallas
+kernel never see sharing. Deterministic K-Means assignment makes shared KV
+bit-identical to recomputed KV, so sharing never changes sampled tokens.
+
 Preemption is by eviction: when a decoding sequence cannot get a block, the
-most recently admitted *other* request is evicted (blocks freed, requeued
-front, prefill progress reset) and recomputed later — deterministic K-Means
-assignment makes the recomputed KV bit-identical, so preemption never
-changes tokens.
+most recently admitted *other* request is evicted (blocks decref'd, requeued
+front, prefill progress reset) and recomputed later — a decref only recycles
+a block nobody else holds, and a re-admitted victim usually re-matches its
+own just-registered prefix blocks, making recovery cheap. Cached refcount-0
+prefix blocks are reclaimed (LRU) by the allocator before any preemption.
 
 Sampling happens host-side from the logits the packed step returns (greedy
 or per-request-keyed temperature): a decoding request samples from its
@@ -50,7 +65,10 @@ from repro.serving.paged_cache import (
     PagedCacheConfig,
     attach_tables,
     blocks_needed,
+    chain_hash,
+    copy_blocks,
     detach_tables,
+    prefix_seed,
 )
 
 __all__ = ["RequestState", "Request", "Scheduler"]
@@ -76,6 +94,7 @@ class Request:
     prefilled: int = 0  # context tokens written to the cache so far
     next_token: int | None = None  # sampled, not yet fed to the model
     blocks: list[int] = dataclasses.field(default_factory=list)
+    block_hashes: list[bytes] = dataclasses.field(default_factory=list)  # chain
     slot: int = -1
 
     @property
@@ -103,9 +122,10 @@ class Scheduler:
     ``sc`` is a :class:`repro.serving.engine.ServeConfig`; its ``cache_len``
     bounds per-request context (prompt + generated), ``block_size`` /
     ``n_blocks`` size the pool (n_blocks=0 -> slots * blocks-per-request, a
-    no-preemption default; pass a smaller pool to exercise preemption), and
+    no-preemption default; pass a smaller pool to exercise preemption),
     ``token_budget`` fixes the packed step's row count (0 -> slots +
-    prefill_chunk; must be >= slots so every decoding slot always fits).
+    prefill_chunk; must be >= slots so every decoding slot always fits), and
+    ``prefix_cache`` enables refcounted prefix-block sharing.
     """
 
     def __init__(self, model, params, sc, slots: int = 8):
@@ -126,7 +146,16 @@ class Scheduler:
             slots, sc.cache_len, jnp.dtype(sc.cache_dtype), quantized=sc.kv_quant,
             layout="paged", block_size=sc.block_size, n_blocks=n_blocks,
         )
-        self.allocator = BlockAllocator(n_blocks)
+        self.allocator = BlockAllocator(n_blocks, prefix_cache=sc.prefix_cache)
+        # chain-hash root: blocks are only shareable within one (layer-set,
+        # quant-policy, geometry) identity — a pool restarted with a different
+        # KV treatment can never alias stale hashes
+        self._hash_seed = prefix_seed(
+            family=model.cfg.family, n_layers=model.cfg.n_layers,
+            n_kv_heads=model.cfg.n_kv_heads, head_dim=model.cfg.head_dim,
+            kv_quant=sc.kv_quant, cache_dtype=str(sc.cache_dtype),
+            block_size=sc.block_size,
+        )
         self._queue: deque[Request] = deque()
         self._running: list[Request] = []
         self._slot_free = list(range(slots - 1, -1, -1))
@@ -134,8 +163,11 @@ class Scheduler:
         self.stats = {"packed_steps": 0, "decode_steps": 0, "prefill_chunks": 0,
                       "mixed_steps": 0, "preemptions": 0, "peak_occupancy": 0.0,
                       "decode_slot_tokens": 0, "prefill_tokens": 0,
-                      "packed_tokens": 0}
+                      "packed_tokens": 0, "prefix_hits": 0,
+                      "prefix_hit_tokens": 0, "prefill_skipped": 0,
+                      "cow_copies": 0}
         self._packed_fn = jax.jit(self._make_packed_step())
+        self._copy_fn = jax.jit(copy_blocks)
 
     # ------------------------------------------------------------------ jit
     def _make_packed_step(self):
@@ -199,35 +231,73 @@ class Scheduler:
         if self._running:
             self._packed_once(results)
             return True
-        if self._queue and not admitted:  # head can never fit: whole pool is free
+        if self._queue and not admitted:  # head can never fit: pool all idle
             r = self._queue[0]
+            need = blocks_needed(len(r.context) + 1, self.pcfg.block_size)
             raise RuntimeError(
-                f"request {r.rid} needs {blocks_needed(len(r.context), self.pcfg.block_size)}"
-                f" blocks; pool has {self.allocator.n_free}/{self.pcfg.n_blocks} free"
+                f"request {r.rid} needs {need} blocks (context + first decode);"
+                f" pool has {self.allocator.n_free}/{self.pcfg.n_blocks} free"
             )
         return bool(self._queue)
 
     # ------------------------------------------------------------- admission
     def _refill_slots(self) -> int:
         """FCFS admission: head of queue enters iff a slot is free and the
-        pool can hold its full current context. Returns #admitted. Admission
-        only binds a slot + blocks; the prompt is written by the packed steps
-        (alongside everyone else's decode tokens), never serially."""
+        pool can hold its full current context PLUS the first decode token
+        (reserving ``blocks_needed(len + 1)`` up front — admitting on an
+        exact fit used to let a block_size-multiple prompt be preempted by
+        its own first ``_grow``). Returns #admitted. Admission only binds a
+        slot + blocks; the prompt is written by the packed steps (alongside
+        everyone else's decode tokens), never serially.
+
+        With the prefix cache on, the longest chain of cached full blocks is
+        aliased (incref) instead of allocated, and ``prefilled`` starts past
+        the shared tokens — capped at ``len(context) - 1`` so at least one
+        prompt token is always computed (its logits seed sampling)."""
         admitted = 0
+        bs = self.pcfg.block_size
         while self._queue and self._slot_free:
             r = self._queue[0]
-            blocks = self.allocator.alloc(blocks_needed(len(r.context),
-                                                        self.pcfg.block_size))
-            if blocks is None:
+            need = blocks_needed(len(r.context) + 1, bs)
+            shared, hashes = self._match_prefix(r)  # increfs on hit
+            fresh = self.allocator.alloc(need - len(shared))
+            if fresh is None:
+                if shared:  # roll the aliases back: blocks return to cached
+                    self.allocator.free(list(reversed(shared)))
                 break
             self._queue.popleft()
-            r.blocks, r.slot, r.state = blocks, self._slot_free.pop(), RequestState.RUNNING
-            r.prefilled = 0
+            r.blocks, r.block_hashes = shared + fresh, hashes
+            r.slot, r.state = self._slot_free.pop(), RequestState.RUNNING
+            r.prefilled = min(len(shared) * bs, len(r.context) - 1)
+            if shared:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += len(shared) * bs
+                self.stats["prefill_skipped"] += r.prefilled
             self._running.append(r)
             admitted += 1
         self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
                                            self.allocator.occupancy)
         return admitted
+
+    def _match_prefix(self, r: Request) -> tuple[list[int], list[bytes]]:
+        """Longest cached full-block prefix of r.context: walks the chain
+        hash block by block, increfs every hit (reviving cached refcount-0
+        blocks), stops at the first miss. Returns (block ids, chain hashes)."""
+        if not self.allocator.prefix_cache:
+            return [], []
+        bs = self.pcfg.block_size
+        ids: list[int] = []
+        hashes: list[bytes] = []
+        h = self._hash_seed
+        for j in range(len(r.context) // bs):
+            h = chain_hash(h, r.context[j * bs : (j + 1) * bs])
+            bid = self.allocator.lookup(h)
+            if bid is None:
+                break
+            self.allocator.incref(bid)
+            ids.append(bid)
+            hashes.append(h)
+        return ids, hashes
 
     # ------------------------------------------------------------ packed step
     def _packed_once(self, results: dict) -> None:
@@ -239,23 +309,26 @@ class Scheduler:
         tokens, clipped to what fits; large prompts span several steps).
         """
         t_budget = self.token_budget
-        # decode reservation: guarantee a block for each incoming token (may
-        # preempt — victims leave self._running, including prefilling ones)
-        for r in list(self._running):
-            if r.state is RequestState.RUNNING and r.decoding:
-                self._grow(r)
-        if not self._running:
-            return
-        decoders = [r for r in self._running if r.decoding]
-        segments: list[tuple[Request, int, int]] = []  # (request, start, n)
-        budget = t_budget - len(decoders)
-        for r in self._running:
-            if budget <= 0:
-                break
-            if not r.decoding:
-                n = min(budget, len(r.context) - r.prefilled)
-                segments.append((r, r.prefilled, n))
-                budget -= n
+        while True:
+            # decode reservation: guarantee a block for each incoming token
+            # (may preempt — victims leave self._running, incl. prefilling)
+            for r in list(self._running):
+                if r.state is RequestState.RUNNING and r.decoding:
+                    self._grow(r)
+            if not self._running:
+                return
+            decoders = [r for r in self._running if r.decoding]
+            segments: list[tuple[Request, int, int]] = []  # (request, start, n)
+            budget = t_budget - len(decoders)
+            for r in self._running:
+                if budget <= 0:
+                    break
+                if not r.decoding:
+                    n = min(budget, len(r.context) - r.prefilled)
+                    segments.append((r, r.prefilled, n))
+                    budget -= n
+            if self._cow_pass(decoders, segments):
+                break  # no preemption mid-pass: the plan above is still live
 
         max_blk = self.pcfg.max_blocks_per_seq
         bt = np.full((self.slots, max_blk), -1, np.int32)
@@ -309,21 +382,81 @@ class Scheduler:
                 # keeps its already-decided next_token instead)
                 r.next_token = self._sample(logits[last_row[r.rid]], r)
                 r.generated.append(r.next_token)
+        for r in self._running:
+            self._register_full_blocks(r)  # publish before anyone finishes
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
+
+    def _cow_pass(self, decoders, segments) -> bool:
+        """Copy-on-write: any block this step will write into whose refcount
+        exceeds 1 (a shared prefix block — the aliased-last-block case) is
+        replaced by a private device-side copy before the packed step runs,
+        so the write can never leak into another request's context. Returns
+        False if making room for a copy preempted somebody — the caller's
+        decode/segment plan is stale and must be recomputed (the swaps done
+        so far remain valid: the blocks are now private)."""
+        writes: list[tuple[Request, int, int]] = []  # (request, lo blk, hi blk)
+        bs = self.pcfg.block_size
+        for r in decoders:
+            j = len(r.context) // bs
+            writes.append((r, j, j))
+        for r, start, n in segments:
+            writes.append((r, start // bs, (start + n - 1) // bs))
+        copies: list[tuple[Request, int, int]] = []  # (request, src, dst)
+        plan_live = True
+        for r, lo, hi in writes:
+            if r.state is not RequestState.RUNNING:
+                continue  # preempted by an earlier copy's allocation
+            for j in range(lo, hi + 1):
+                bid = r.blocks[j]
+                if self.allocator.refcount(bid) <= 1:
+                    continue
+                new, preempted = self._alloc_one(r)  # never preempts r itself
+                plan_live &= not preempted
+                copies.append((r, bid, new))
+                r.blocks[j] = new
+                self.allocator.free([bid])  # drop r's alias on the original
+        # a later allocation may have preempted an earlier copy's owner and
+        # recycled its destination block — drop stale pairs so no two copies
+        # scatter into the same destination (scatter order is unspecified)
+        copies = [(r, s, d) for r, s, d in copies
+                  if r.state is RequestState.RUNNING]
+        self.stats["cow_copies"] += len(copies)
+        if copies:
+            # pad (src, dst) to a power-of-two bucket by REPEATING the first
+            # pair (duplicate scatters of the same value are idempotent, and
+            # no pad row can race a real destination): the jitted copy then
+            # compiles per bucket, not per distinct copy count (an
+            # unbounded-recompile serving stall)
+            cap = 1
+            while cap < len(copies):
+                cap *= 2
+            pad = cap - len(copies)
+            src = [s for _, s, _ in copies] + [copies[0][1]] * pad
+            dst = [d for _, _, d in copies] + [copies[0][2]] * pad
+            self.pools = self._copy_fn(self.pools, np.asarray(src, np.int32),
+                                       np.asarray(dst, np.int32))
+        return plan_live
 
     def _grow(self, r: Request) -> None:
         """Guarantee a block for position len(r.context) (the token about to
         be written), evicting the youngest other request if the pool is dry."""
         if blocks_needed(len(r.context) + 1, self.pcfg.block_size) <= len(r.blocks):
             return
+        got, _ = self._alloc_one(r)
+        r.blocks.append(got)
+
+    def _alloc_one(self, r: Request) -> tuple[int, bool]:
+        """One block for ``r``, preempting the youngest *other* request until
+        the allocator (free list, then cached-prefix LRU) can serve it.
+        Returns (block id, whether anything was preempted)."""
+        preempted = False
         while True:
             got = self.allocator.alloc(1)
             if got is not None:
-                r.blocks.extend(got)
                 self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
                                                    self.allocator.occupancy)
-                return
+                return got[0], preempted
             victims = [v for v in self._running if v is not r]
             if not victims:
                 raise RuntimeError(
@@ -331,21 +464,39 @@ class Scheduler:
                     "blocks is exhausted and there is nothing left to preempt"
                 )
             self._preempt(victims[-1])
+            preempted = True
+
+    def _register_full_blocks(self, r: Request) -> None:
+        """Publish every newly-FULL block of ``r`` under its chain hash so
+        later admissions can alias it (first writer wins; blocks aliased at
+        admission arrive pre-hashed in r.block_hashes and are skipped)."""
+        if not self.allocator.prefix_cache:
+            return
+        bs = self.pcfg.block_size
+        full = r.prefilled // bs  # only blocks whose every token is written
+        h = r.block_hashes[-1] if r.block_hashes else self._hash_seed
+        while len(r.block_hashes) < full:
+            j = len(r.block_hashes)
+            h = chain_hash(h, r.context[j * bs : (j + 1) * bs])
+            r.block_hashes.append(h)
+            self.allocator.register(h, r.blocks[j])
 
     def _preempt(self, r: Request) -> None:
-        self.allocator.free(r.blocks)
-        r.blocks = []
+        # decref tail-first so a whole cached chain ages out leaf-before-root
+        # (evicting a root block would orphan its still-cached descendants)
+        self.allocator.free(list(reversed(r.blocks)))
+        r.blocks, r.block_hashes = [], []
         self._slot_free.append(r.slot)
         r.slot = -1
-        r.prefilled = 0  # re-admission rewrites the whole context
+        r.prefilled = 0  # re-admission rewrites (or re-matches) the context
         r.state = RequestState.PREEMPTED
         self._running.remove(r)
         self._queue.appendleft(r)  # front: preserves FCFS completion order
         self.stats["preemptions"] += 1
 
     def _finish(self, r: Request, results: dict) -> None:
-        self.allocator.free(r.blocks)
-        r.blocks = []
+        self.allocator.free(list(reversed(r.blocks)))
+        r.blocks, r.block_hashes = [], []
         self._slot_free.append(r.slot)
         r.slot = -1
         r.state = RequestState.FINISHED

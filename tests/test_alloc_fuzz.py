@@ -1,0 +1,117 @@
+"""Allocator-safety fuzz: random admit / alias / grow / decref / double-free
+sequences against the refcounted prefix-sharing ``BlockAllocator``.
+
+The op interpreter (``_run_ops``) checks, after EVERY operation, the two
+invariants refcounted sharing depends on (ISSUE 4):
+
+  * a block held by two live requests always has refcount > 1 — verified in
+    the strong form ``refcount(b) == number of holders of b``;
+  * allocatable + live == pool: ``n_free + |distinct held ids| == n_blocks``
+    (``n_free`` counts truly-free AND cached refcount-0 prefix blocks).
+
+It is driven twice: a seeded exhaustive sweep that needs nothing beyond the
+standard deps (runs everywhere, including CI), and a hypothesis ``@given``
+property over arbitrary op lists when hypothesis is installed. The
+scheduler-level randomized-traffic invariant test (real model, preemption +
+prefix aliasing + COW) lives in tests/test_serving.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving.paged_cache import BlockAllocator, chain_hash, prefix_seed
+
+_SEED = prefix_seed(pool="alloc-fuzz")
+
+
+def _run_ops(n_blocks: int, ops: list[tuple[int, int]]) -> None:
+    """Interpret (op, x) pairs against one allocator, checking invariants
+    after every op. ``x`` selects the request / block / size the op acts on
+    (modulo whatever is currently legal), so any int sequence is valid."""
+    a = BlockAllocator(n_blocks, prefix_cache=True)
+    live: dict[int, list[int]] = {}  # rid -> block ids it holds (one ref each)
+    published: list[tuple[bytes, int]] = []  # (hash, block) ever registered
+    next_rid, next_tok = 0, 0
+    for op, x in ops:
+        if op == 0:  # admit: all-or-nothing allocation of 1..3 blocks
+            got = a.alloc(x % 3 + 1)
+            if got is not None:
+                held = {b for ids in live.values() for b in ids}
+                assert len(set(got)) == len(got), "alloc handed out duplicates"
+                assert all(0 <= b < n_blocks for b in got)
+                assert not set(got) & held, "alloc handed out a live block"
+                live[next_rid] = got
+                next_rid += 1
+        elif op == 1 and live:  # finish / preempt: decref everything held
+            rid = sorted(live)[x % len(live)]
+            a.free(list(reversed(live.pop(rid))))
+        elif op == 2 and live:  # grow a live request by one block
+            rid = sorted(live)[x % len(live)]
+            got = a.alloc(1)
+            if got is not None:
+                assert got[0] not in {b for ids in live.values() for b in ids}
+                live[rid] += got
+        elif op == 3 and live:  # register a held block under a fresh hash
+            rid = sorted(live)[x % len(live)]
+            bid = live[rid][x % len(live[rid])]
+            h = chain_hash(_SEED, [next_tok])
+            next_tok += 1
+            try:
+                fresh = a.register(h, bid)
+            except ValueError:
+                fresh = False  # already published under an older hash — fine
+            if fresh:
+                published.append((h, bid))
+        elif op == 4 and published:  # alias: a new request joins a prefix
+            h, bid = published[x % len(published)]
+            if a.lookup(h) == bid:  # still cached/live (not LRU-evicted)
+                a.incref(bid)
+                live[next_rid] = [bid]
+                next_rid += 1
+        elif op == 5:  # freeing an unheld block must raise, not corrupt
+            held = {b for ids in live.values() for b in ids}
+            unheld = [b for b in range(n_blocks) if b not in held]
+            if unheld:
+                before = a.n_free
+                with pytest.raises(ValueError):
+                    a.free([unheld[x % len(unheld)]])
+                assert a.n_free == before, "rejected free mutated the pool"
+        held = [b for ids in live.values() for b in ids]
+        for b in range(n_blocks):
+            assert a.refcount(b) == held.count(b), (
+                f"block {b}: refcount {a.refcount(b)} != {held.count(b)} holders"
+            )
+        assert a.n_free + len(set(held)) == n_blocks
+    # drain: every reference returned -> the whole pool is allocatable again
+    for rid in sorted(live):
+        a.free(list(reversed(live[rid])))
+    assert a.n_free == n_blocks
+
+
+def test_allocator_fuzz_seeded_sweep():
+    """Deterministic sweep over many pool sizes and op mixes (no optional
+    deps): the CI-everywhere arm of the fuzz."""
+    for seed in range(25):
+        rng = np.random.RandomState(seed)
+        n_blocks = int(rng.randint(2, 13))
+        ops = [(int(rng.randint(0, 6)), int(rng.randint(0, 256)))
+               for _ in range(120)]
+        _run_ops(n_blocks, ops)
+
+
+def test_allocator_fuzz_hypothesis():
+    """Property form over arbitrary op lists (shrinks on failure)."""
+    hypothesis = pytest.importorskip("hypothesis")  # property tests need it
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=150, deadline=None)
+    @given(st.integers(2, 12),
+           st.lists(st.tuples(st.integers(0, 5), st.integers(0, 255)),
+                    max_size=100))
+    def prop(n_blocks, ops):
+        _run_ops(n_blocks, ops)
+
+    prop()

@@ -1,9 +1,12 @@
 """Serving subsystem tests: ring-buffer wraparound, quantized-KV parity,
 paged-cache equivalence with the dense path, the packed token-budget
 scheduler (mixed prefill+decode steps, decode-reservation accounting,
-admission / slot refill / preemption determinism), the fixed-slot
-fallback's pad masking, and the Pallas paged-attention kernel (single-token
-and query-segment contracts) vs its jnp oracles."""
+admission / slot refill / preemption determinism), prefix sharing
+(refcounted content-hashed blocks, copy-on-write, LRU eviction of cached
+prefixes, token-identity with sharing off), allocator safety (double-free
+validation, admission block reservation, padded-row write masking), the
+fixed-slot fallback's pad masking, and the Pallas paged-attention kernel
+(single-token and query-segment contracts) vs its jnp oracles."""
 
 import dataclasses
 
@@ -18,7 +21,8 @@ from repro.core.quantspec import QuantSpec
 from repro.models import layers as L
 from repro.models.model import build, quantize_model
 from repro.serving.engine import ServeConfig, ServingEngine, make_serve_step
-from repro.serving.paged_cache import BlockAllocator, attach_tables, detach_tables
+from repro.serving.paged_cache import (BlockAllocator, attach_tables,
+                                       chain_hash, detach_tables, prefix_seed)
 
 QSPEC = QuantSpec(base=QLinearConfig(detection="none"))
 
@@ -416,6 +420,281 @@ def test_block_allocator_invariants():
     assert sorted(got[2:] + more) == sorted(set(got[2:] + more))  # ids unique
     a.free(got[2:] + more)
     assert a.n_free == 6
+
+
+# ---------------------------------------------------------------------------
+# allocator safety: validation, refcounts, prefix LRU
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_double_free_raises():
+    """Regression (ISSUE 4): free used to silently accept duplicate or
+    out-of-range ids, corrupting the free list so one block was later handed
+    to two requests — now every bad id raises and the pool stays intact."""
+    a = BlockAllocator(4)
+    got = a.alloc(2)
+    a.free(got)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([got[0]])
+    with pytest.raises(ValueError, match="out of range"):
+        a.free([4])
+    with pytest.raises(ValueError, match="out of range"):
+        a.free([-1])
+    [b] = a.alloc(1)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([b, b])  # more frees than refs in ONE call: rejected whole
+    assert a.refcount(b) == 1  # validation precedes mutation: b still held
+    # the rejected frees corrupted nothing: exactly 4 distinct blocks exist
+    rest = a.alloc(a.n_free)
+    assert b not in rest
+    assert sorted(set(rest)) == sorted(rest) and a.alloc(1) is None
+    a.free([b] + rest)
+    assert a.n_free == 4
+
+
+def test_block_allocator_refcount_and_prefix_lru():
+    a = BlockAllocator(3, prefix_cache=True)
+    [b0] = a.alloc(1)
+    h0 = chain_hash(prefix_seed(pool="t"), [1, 2])
+    assert a.register(h0, b0) is True
+    a.incref(b0)  # a second request aliases the block
+    a.free([b0])
+    assert a.refcount(b0) == 1  # still live: one holder left
+    a.free([b0])  # last ref: parks in the LRU, still matchable
+    assert a.refcount(b0) == 0 and a.lookup(h0) == b0
+    assert a.n_free == 3 and a.n_cached == 1  # cached counts as allocatable
+    with pytest.raises(ValueError, match="double free"):
+        a.free([b0])  # cached is not held: a decref would go negative
+    a.incref(b0)  # revive from the LRU
+    assert a.n_cached == 0 and a.refcount(b0) == 1
+    a.free([b0])
+    # exhausting the pool evicts the cached block and drops its hash
+    got = a.alloc(3)
+    assert sorted(got) == [0, 1, 2]
+    assert a.lookup(h0) is None and a.evictions == 1
+    a.free(got)
+    with pytest.raises(ValueError, match="non-live"):
+        a.register(h0, 0)  # registering a freed block would publish garbage
+
+
+def test_block_allocator_lru_evicts_oldest_first():
+    a = BlockAllocator(2, prefix_cache=True)
+    [x] = a.alloc(1)
+    [y] = a.alloc(1)
+    hx, hy = chain_hash(b"s", [1]), chain_hash(b"s", [2])
+    a.register(hx, x)
+    a.register(hy, y)
+    a.free([x])  # parked first -> oldest
+    a.free([y])
+    [z] = a.alloc(1)  # free list empty: must evict x, keep y matchable
+    assert z == x and a.lookup(hx) is None and a.lookup(hy) == y
+
+
+def test_admission_reserves_first_decode_block_no_thrash(small_lm):
+    """Regression (ISSUE 4): a prompt whose length is a multiple of
+    block_size admitted into an exactly-full pool used to be thrashed by its
+    own first ``_grow`` — admission now reserves blocks for context + 1."""
+    cfg, model, params, qp = small_lm
+    mk = lambda n_blocks: ServingEngine(
+        model, qp,
+        ServeConfig(cache_len=8, cache_dtype="float32", block_size=4,
+                    n_blocks=n_blocks, prefix_cache=False),
+        batch_slots=2,
+    )
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8]]  # each exactly one block
+    want = mk(0).generate(prompts, max_new_tokens=4)
+    small = mk(2)  # room for ONE admitted request (1 ctx block + 1 decode)
+    got = small.generate(prompts, max_new_tokens=4)
+    assert got == want
+    assert small.scheduler.stats["preemptions"] == 0, (
+        "admission under an exactly-full pool preempted its own admittee"
+    )
+
+
+def _block_rows(sched, bid):
+    """One block's pool contents as {leaf: (block_size, ...) array} with the
+    token-row axis leading (layers folded behind), for byte comparisons."""
+    pools = sched.pools
+    if isinstance(pools, dict):  # scanned: (L, n_blocks, bs, ...)
+        return {k: np.moveaxis(np.asarray(v[:, bid]), 1, 0)
+                for k, v in pools.items() if k.startswith("pages_")}
+    return {f"{i}/{k}": np.asarray(layer[k][bid])
+            for i, layer in enumerate(pools)
+            for k in layer if k.startswith("pages_")}
+
+
+def test_packed_padded_rows_leave_slot0_blocks_untouched(small_lm):
+    """Regression guard (ISSUE 4): padded rows in a partially-filled packed
+    step carry slot_ids=0 with pos=-1 — they must be masked out of the
+    scatter, leaving slot 0's pool blocks byte-identical except the one row
+    its own decode token legitimately wrote."""
+    cfg, model, params, qp = small_lm
+    eng = ServingEngine(model, qp,
+                        ServeConfig(cache_len=32, cache_dtype="float32",
+                                    block_size=4, token_budget=8,
+                                    prefix_cache=False),
+                        batch_slots=2)
+    sched = eng.scheduler
+    results: dict[int, list[int]] = {}
+    ra = sched.submit([1, 2, 3, 4, 5, 6], 8, salt=0)
+    sched.step(results)  # 6 prefill rows + 2 padded rows
+    a = next(r for r in sched._running if r.rid == ra)
+    assert a.slot == 0 and a.decoding
+    before = {bid: _block_rows(sched, bid) for bid in a.blocks}
+    sched.step(results)  # 1 decode row (pos 6) + 7 padded rows aimed at slot 0
+    bs = sched.pcfg.block_size
+    wrote_blk, wrote_row = 6 // bs, 6 % bs
+    for j, bid in enumerate(a.blocks):
+        after = _block_rows(sched, bid)
+        for key, b4 in before[bid].items():
+            for row in range(bs):
+                if j == wrote_blk and row == wrote_row:
+                    continue  # the decode token's own slot: expected to change
+                np.testing.assert_array_equal(
+                    b4[row], after[key][row],
+                    err_msg=f"padded row corrupted block {bid} row {row} ({key})",
+                )
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing / copy-on-write
+# ---------------------------------------------------------------------------
+
+def _mk_prefix_engine(model, qp, pc, *, kv_quant=False, slots=2, cache_len=64,
+                      n_blocks=0):
+    return ServingEngine(
+        model, qp,
+        ServeConfig(cache_len=cache_len, cache_dtype="float32", block_size=4,
+                    prefill_chunk=4, kv_quant=kv_quant, n_blocks=n_blocks,
+                    prefix_cache=pc),
+        batch_slots=slots,
+    )
+
+
+def test_prefix_sharing_token_identical_mixed_workload(small_lm):
+    """Tentpole acceptance: greedy outputs with prefix sharing enabled are
+    token-identical to the non-sharing scheduler on a mixed workload (shared
+    system prompt + distinct tails + unrelated prompts), and the shared
+    engine actually skips prefill for aliased full blocks."""
+    cfg, model, params, qp = small_lm
+    system = [3, 1, 4, 1, 5, 9, 2, 6]  # two full blocks at block_size=4
+    prompts = [system + [40 + i, 50 + i] for i in range(4)] + \
+              [[80 + i] for i in range(2)]
+    budgets = [5, 3, 6, 4, 2, 5]
+    want = _mk_prefix_engine(model, qp, False).generate(prompts, budgets)
+    eng = _mk_prefix_engine(model, qp, True)
+    got = eng.generate(prompts, budgets)
+    assert got == want
+    st = eng.scheduler.stats
+    assert st["prefix_hits"] > 0 and st["prefix_hit_tokens"] > 0
+    assert st["prefill_skipped"] > 0
+    # the skipped tokens really were never computed
+    base = _mk_prefix_engine(model, qp, False)
+    base.generate(prompts, budgets)
+    assert st["prefill_tokens"] == \
+        base.scheduler.stats["prefill_tokens"] - st["prefill_skipped"]
+
+
+def test_prefix_sharing_warm_cache_second_call(small_lm):
+    """The prefix cache persists across generate() calls: a re-served
+    workload hits on every shared prompt and stays token-identical."""
+    cfg, model, params, qp = small_lm
+    system = [3, 1, 4, 1, 5, 9, 2, 6]
+    prompts = [system + [40 + i] for i in range(3)]
+    eng = _mk_prefix_engine(model, qp, True)
+    first = eng.generate(prompts, max_new_tokens=4)
+    hits0 = eng.scheduler.stats["prefix_hits"]
+    second = eng.generate(prompts, max_new_tokens=4)
+    assert second == first
+    assert eng.scheduler.stats["prefix_hits"] - hits0 == len(prompts)
+
+
+def test_prefix_cow_on_shared_exact_multiple_prompt(small_lm):
+    """A prompt that is an exact block multiple and fully cached aliases ALL
+    its blocks; recomputing only the last token writes into a shared block,
+    which must copy-on-write (not corrupt the donor) — outputs of both the
+    donor and the follower match solo runs."""
+    cfg, model, params, qp = small_lm
+    p = [3, 1, 4, 1, 5, 9, 2, 6]  # exactly two blocks
+    solo_long = _mk_prefix_engine(model, qp, False, cache_len=32).generate(
+        [p], max_new_tokens=12)[0]
+    solo_short = _mk_prefix_engine(model, qp, False, cache_len=32).generate(
+        [p], max_new_tokens=4)[0]
+    eng = _mk_prefix_engine(model, qp, True, cache_len=32)
+    sched = eng.scheduler
+    results: dict[int, list[int]] = {}
+    lead = sched.submit(p, 12, salt=0)  # long-lived donor
+    while not any(r.rid == lead and r.decoding for r in sched._running):
+        sched.step(results)
+    fol = sched.submit(p, 4, salt=1)  # same prompt while donor still holds it
+    results.update(sched.run())
+    assert results[lead] == solo_long and results[fol] == solo_short
+    assert sched.stats["cow_copies"] >= 1
+    assert sched.stats["prefill_skipped"] >= len(p) - 1
+
+
+def test_prefix_sharing_int4_pool_token_identical(small_lm):
+    """Shared K-Means int4 blocks: aliasing quantized pages is exact (the
+    paper's memory win compounds — one physical int4 block, many requests)."""
+    cfg, model, params, qp = small_lm
+    system = [3, 1, 4, 1, 5, 9, 2, 6]
+    prompts = [system + [40 + i] for i in range(3)]
+    want = _mk_prefix_engine(model, qp, False, kv_quant=True,
+                             cache_len=32).generate(prompts, max_new_tokens=4)
+    eng = _mk_prefix_engine(model, qp, True, kv_quant=True, cache_len=32)
+    assert eng.generate(prompts, max_new_tokens=4) == want
+    assert eng.scheduler.stats["prefix_hit_tokens"] > 0
+
+
+def test_prefix_cache_eviction_under_pressure(small_lm):
+    """Cached refcount-0 prefix blocks are reclaimed (LRU) for new
+    admissions instead of refusing them: many distinct prompts stream
+    through a pool far smaller than their combined footprint."""
+    cfg, model, params, qp = small_lm
+    prompts = [[10 * i + j for j in range(1, 9)] for i in range(1, 5)]
+    mk = lambda pc: _mk_prefix_engine(model, qp, pc, slots=1, cache_len=16,
+                                      n_blocks=4)
+    want = mk(False).generate(prompts, max_new_tokens=3)
+    eng = mk(True)
+    assert eng.generate(prompts, max_new_tokens=3) == want
+    assert eng.scheduler.allocator.evictions > 0
+    assert eng.stats["prefix_evictions"] > 0  # engine stats plumbing
+
+
+def test_scheduler_random_traffic_preserves_allocator_invariants(small_lm):
+    """Seeded random arrivals/budgets over a small pool (preemption, prefix
+    aliasing, and COW all fire): after every step each block is held by
+    exactly ``refcount`` many running requests, and allocatable + live
+    always equals the pool size."""
+    cfg, model, params, qp = small_lm
+    eng = ServingEngine(model, qp,
+                        ServeConfig(cache_len=16, cache_dtype="float32",
+                                    block_size=4, n_blocks=10, token_budget=8,
+                                    prefill_chunk=4, prefix_cache=True),
+                        batch_slots=3)
+    sched = eng.scheduler
+    alloc = sched.allocator
+    rng = np.random.RandomState(0)
+    prefix = [7, 7, 7, 7]  # one shared full block
+    results: dict[int, list[int]] = {}
+    pending = 14
+    while pending or sched._running or sched._queue:
+        if pending and (rng.rand() < 0.5
+                        or not (sched._running or sched._queue)):
+            tail = [int(t) for t in rng.randint(1, 200, int(rng.randint(1, 6)))]
+            prompt = (list(prefix) if rng.rand() < 0.6 else []) + tail
+            sched.submit(prompt, int(rng.randint(1, 5)))
+            pending -= 1
+        if sched._running or sched._queue:
+            sched.step(results)
+        held = [b for r in sched._running for b in r.blocks]
+        for b in range(sched.pcfg.n_blocks):
+            assert alloc.refcount(b) == held.count(b), (
+                f"block {b}: {alloc.refcount(b)} refs, {held.count(b)} holders"
+            )
+        assert alloc.n_free + len(set(held)) == sched.pcfg.n_blocks
+    assert len(results) == 14
+    assert sched.stats["prefix_hit_tokens"] > 0
+    assert alloc.n_free == sched.pcfg.n_blocks
 
 
 # ---------------------------------------------------------------------------
