@@ -25,6 +25,7 @@ MODULES = [
     "bench_throughput",        # Fig 11/12/13
     "bench_pipeline",          # Fig 14 + Fig 15(b,c)
     "bench_outlier_sensitivity",  # Fig 15(a)
+    "bench_sensitivity",       # per-layer W-bits sweep -> draft-spec choice
     "bench_calibration",       # Fig 17
     "bench_offline_online",    # Fig 3 + Fig 5
     "bench_orizuru",           # §IV-D comparison counts

@@ -8,7 +8,15 @@ W8 down-projections, int4 K-Means KV cache), SAVES the quantized model with
 artifact and serves a batch of prompts through the paged continuous-batching
 engine. No calibration or K-Means code runs on the load path.
 
-Run: PYTHONPATH=src python examples/serve_quantized.py [--steps 200] [--smoke]
+Pass ``--speculative`` to also quantize the SAME model under the default
+W3/A4 draft policy (``repro.serving.speculative.DEFAULT_DRAFT_SPEC`` — the
+per-layer sensitivity sweep in benchmarks/bench_sensitivity.py is what picks
+its W4 guard), save it as a second artifact, and re-serve the prompts with
+draft-propose / target-verify speculative decoding: token-identical output,
+several tokens committed per target step (acceptance rate printed).
+
+Run: PYTHONPATH=src python examples/serve_quantized.py [--steps 200]
+     [--smoke] [--speculative]
 """
 
 import argparse
@@ -31,6 +39,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200, help="warmup train steps")
     ap.add_argument("--smoke", action="store_true", help="CI: minimal training")
+    ap.add_argument("--speculative", action="store_true",
+                    help="also serve with a W3 draft artifact + verification")
     args = ap.parse_args()
     steps = 30 if args.smoke else args.steps
 
@@ -86,8 +96,38 @@ def main() -> None:
                   f"{st['prefill_tokens']} prefill tokens in {st['prefill_chunks']} segments, "
                   f"peak pool occupancy {st['peak_occupancy']:.0%}, "
                   f"{st['preemptions']} preemptions")
+
+        if args.speculative:
+            from repro.serving.speculative import (DEFAULT_DRAFT_SPEC,
+                                                   SpeculativeConfig)
+
+            with tempfile.TemporaryDirectory() as draft_dir:
+                print("== quantize the SAME model under the default W3 draft "
+                      "policy and save the draft artifact")
+                save_quantized(draft_dir, cfg, DEFAULT_DRAFT_SPEC,
+                               quantize_model(model, params, DEFAULT_DRAFT_SPEC))
+                spec_engine = ServingEngine(
+                    served_model, served_params,
+                    ServeConfig.from_spec(
+                        served_spec, cache_len=128, block_size=16,
+                        prefill_chunk=16,
+                        speculative=SpeculativeConfig(k=2,
+                                                      draft_artifact=draft_dir)),
+                    batch_slots=4,
+                )
+            spec_outs = spec_engine.generate(prompts, max_new_tokens=24)
+            assert spec_outs == outs, "speculative greedy must be token-identical"
+            st = spec_engine.stats
+            print(f"== speculative serving: token-identical in "
+                  f"{st['packed_steps']} target steps "
+                  f"(non-speculative took {engine.scheduler.stats['packed_steps']}), "
+                  f"acceptance {st['acceptance_rate']:.0%} "
+                  f"({st['accepted_tokens']}/{st['drafted_tokens']} drafts, "
+                  f"{st['rolled_back_tokens']} rolled back, "
+                  f"{st['draft_steps']} draft dispatches)")
     print("OK (QuantSpec-quantized artifact saved, reloaded, and served: "
-          "W4/W8 weights + A4 activations + int4 paged KV, continuous batching)")
+          "W4/W8 weights + A4 activations + int4 paged KV, continuous batching"
+          + (", speculative decoding verified" if args.speculative else "") + ")")
 
 
 if __name__ == "__main__":

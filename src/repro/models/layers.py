@@ -512,9 +512,13 @@ def attention_apply(
 
     Paged caches may carry ``token_slots`` (B,) — the packed token-budget
     layout, where ``block_tables``/ ``ctx_lens`` are per *slot* and each
-    batch row is one token of slot ``token_slots[b]``; the per-row table is
-    gathered device-side. Ring caches may carry ``pad_len`` (B,) — keys at
-    positions < pad_len[b] (a left-padded prompt's pad tokens) are masked.
+    batch row is one SEGMENT (S contiguous tokens, possibly padded with
+    position -1; S = 1 is the flat one-token-per-row case) of slot
+    ``token_slots[b]``; the per-row table is gathered device-side, once per
+    segment rather than once per token. Verify segments of the speculative
+    decoder ride this same layout. Ring caches may carry ``pad_len`` (B,) —
+    keys at positions < pad_len[b] (a left-padded prompt's pad tokens) are
+    masked.
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim

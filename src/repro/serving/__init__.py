@@ -1,11 +1,19 @@
-"""Serving subsystem: paged K-Means KV cache + continuous-batching scheduler.
+"""Serving subsystem: paged K-Means KV cache + continuous-batching scheduler
+with prefix sharing and speculative decoding.
 
-See serving/README.md for the block layout, scheduler states and int4 format.
+See serving/README.md for the block layout, scheduler states, int4 format,
+and the draft-propose / target-verify loop.
 """
 
 from repro.serving.engine import ServeConfig, ServingEngine, make_prefill_step, make_serve_step
 from repro.serving.paged_cache import BlockAllocator, PagedCacheConfig
 from repro.serving.scheduler import Request, RequestState, Scheduler
+from repro.serving.speculative import (
+    DEFAULT_DRAFT_SPEC,
+    DraftRunner,
+    SpeculativeConfig,
+    greedy_verify,
+)
 
 __all__ = [
     "ServeConfig",
@@ -17,4 +25,8 @@ __all__ = [
     "Request",
     "RequestState",
     "Scheduler",
+    "SpeculativeConfig",
+    "DraftRunner",
+    "greedy_verify",
+    "DEFAULT_DRAFT_SPEC",
 ]

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.quantspec import QuantSpec
 from repro.models.model import Model
+from repro.serving.speculative import SpeculativeConfig
 
 __all__ = ["ServeConfig", "make_prefill_step", "make_serve_step", "ServingEngine"]
 
@@ -60,6 +61,16 @@ class ServeConfig:
     # tokens) with copy-on-write on shared partial blocks; token-identical
     # to prefix_cache=False on greedy decode (serving/README.md)
     prefix_cache: bool = True
+    # tokens packed per kernel segment row in the packed step (one
+    # block-table gather per ROW, not per token); 1 = the flat layout, which
+    # is also what keeps speculative greedy bit-identical to non-speculative
+    # greedy (same forward shapes)
+    seg_width: int = 1
+    # speculative decoding: draft k tokens with a low-bit draft model, verify
+    # k+1 positions per packed step (serving/speculative.py). None = off.
+    # Token-identical to non-speculative greedy; greedy-only (temperature
+    # configs raise until the rejection-sampling hook is implemented).
+    speculative: SpeculativeConfig | None = None
 
     @classmethod
     def from_spec(cls, spec: QuantSpec, **kw) -> "ServeConfig":
@@ -137,15 +148,37 @@ class ServingEngine:
     slot-sized chunking. Both paths sample each step from that step's logits.
     """
 
-    def __init__(self, model: Model, params, sc: ServeConfig, batch_slots: int = 8):
+    def __init__(self, model: Model, params, sc: ServeConfig, batch_slots: int = 8,
+                 draft=None):
+        """``draft`` (speculative configs): a prepared draft model —
+        ``(model, params)``, ``(model, params, spec)``, or the
+        :class:`~repro.core.artifact.QuantizedArtifact` tuple. When omitted,
+        ``sc.speculative.draft_artifact`` is loaded from disk (the
+        production path: quantize the draft once, serve it everywhere)."""
         self.model, self.sc, self.slots = model, sc, batch_slots
         self.params = params
         self.paged = sc.paged and model.supports_paged_cache()
         if self.paged:
             from repro.serving.scheduler import Scheduler
 
-            self.scheduler = Scheduler(model, params, sc, slots=batch_slots)
+            if sc.speculative is not None and draft is None:
+                if sc.speculative.draft_artifact is None:
+                    raise ValueError(
+                        "ServeConfig.speculative needs a draft model: set "
+                        "speculative.draft_artifact or pass draft=(model, "
+                        "params[, spec]) to the engine"
+                    )
+                from repro.serving.speculative import load_draft
+
+                draft = load_draft(sc.speculative.draft_artifact)
+            self.scheduler = Scheduler(model, params, sc, slots=batch_slots,
+                                       draft=draft)
         else:
+            if sc.speculative is not None:
+                raise ValueError(
+                    "speculative decoding needs the paged scheduler "
+                    "(paged=True and a paged-capable model family)"
+                )
             self.scheduler = None
             self._prefill = jax.jit(make_prefill_step(model, sc))
             self._step = jax.jit(make_serve_step(model, sc))
@@ -154,13 +187,20 @@ class ServingEngine:
     def stats(self) -> dict:
         """Serving counters. Paged path: the scheduler's dict (packed-step /
         preemption accounting plus prefix-cache hits, tokens of prefill
-        skipped, copy-on-write copies, and cached-prefix evictions). The
-        fixed-slot fallback keeps no counters (empty dict)."""
+        skipped, copy-on-write copies, and cached-prefix evictions; under a
+        speculative config also the draft forwards run and the acceptance
+        rate — accepted / drafted tokens). The fixed-slot fallback keeps no
+        counters (empty dict)."""
         if self.scheduler is None:
             return {}
-        return dict(self.scheduler.stats,
-                    prefix_evictions=self.scheduler.allocator.evictions,
-                    prefix_blocks_cached=self.scheduler.allocator.n_cached)
+        d = dict(self.scheduler.stats,
+                 prefix_evictions=self.scheduler.allocator.evictions,
+                 prefix_blocks_cached=self.scheduler.allocator.n_cached)
+        if self.scheduler.draft is not None:
+            d["draft_steps"] = self.scheduler.draft.steps
+            d["acceptance_rate"] = (d["accepted_tokens"]
+                                    / max(1, d["drafted_tokens"]))
+        return d
 
     def generate(
         self, prompts: list[list[int]], max_new_tokens: int | list[int] = 32,

@@ -172,6 +172,18 @@ class BlockAllocator:
                 else:
                     self._free.append(b)
 
+    def truncate(self, ids: list[int], keep: int) -> list[int]:
+        """Rollback: drop one reference from every block past the first
+        ``keep`` (tail-first, so cached chains age leaf-before-root) and
+        return the kept prefix. The speculative-decoding path uses this to
+        free blocks that held only rejected draft tokens; the freed suffix is
+        validated exactly like ``free`` (a shared tail block is merely
+        decref'd — the other holders keep it)."""
+        if keep < 0:
+            raise ValueError(f"truncate keep must be >= 0, got {keep}")
+        self.free(list(reversed(ids[keep:])))
+        return list(ids[:keep])
+
     def incref(self, block_id: int) -> None:
         """Add an alias to a live or cached block (never to a free one)."""
         if self._ref[block_id] == 0:
@@ -237,11 +249,13 @@ def attach_tables(pools, block_tables: jax.Array, ctx_lens: jax.Array,
     * per-sequence (token_slots=None): batch row ``b`` is one sequence —
       ``block_tables[b]`` is its table, ``ctx_lens[b]`` its valid context.
       This is the prefill / classic decode layout.
-    * packed (token_slots (T,)): batch row ``t`` is ONE TOKEN of scheduler
-      slot ``token_slots[t]``; ``block_tables`` stays per *slot*
-      (slots, max_blk) and ``ctx_lens`` is per token (T,). The per-row table
-      gather (``block_tables[token_slots]``) happens device-side inside
-      ``attention_apply`` — the token-budget mixed prefill+decode step.
+    * packed (token_slots (G,)): batch row ``g`` is ONE SEGMENT — S
+      contiguous tokens (S = 1: one token per row) — of scheduler slot
+      ``token_slots[g]``; ``block_tables`` stays per *slot*
+      (slots, max_blk) and ``ctx_lens`` is per segment row (G,). The
+      per-row table gather (``block_tables[token_slots]``) happens
+      device-side inside ``attention_apply``, once per segment — the
+      token-budget mixed prefill+decode(+verify) step.
 
     Under ``scan_layers`` caches are scanned over a leading L axis, so the
     (identical) tables are broadcast per layer; unscanned models get the same

@@ -8,19 +8,34 @@ Request lifecycle::
     RUNNING --pool exhausted--> PREEMPTED        refilled next step)
     PREEMPTED --requeued at the front--> QUEUED  (recompute on re-admission)
 
-The hot loop is ONE jitted *packed* step of fixed shape: every scheduler
-iteration assembles a flat batch of exactly ``token_budget`` token rows —
-one decode token for every decoding slot (reserved FIRST, so admissions can
-never starve running requests) plus as many prefill tokens from admitting
-requests as fit in the remaining budget — with per-token (slot, position)
-vectors. Each row writes its token's KV into the slot's blocks and attends
-through the slot's block table; rows of the same request are causally
-ordered by position within the same forward (write-then-attend), so a
-prefill segment and the step's decode tokens ride in one ``model.apply``.
-Unused rows carry position -1 and are masked out of both the scatter and the
-attention. There is no separate prefill function and no batch=1 serial
-admission phase: prefill/decode interference is gone by construction, and a
-step's cost is always exactly ``token_budget`` tokens.
+The hot loop is ONE jitted *packed* step of fixed shape: a grid of
+``rows x seg_width`` token cells (``token_budget = rows * seg_width``). Every
+scheduler iteration fills the grid with **segments** — each grid row is a
+contiguous run of ONE request's tokens, carrying that request's slot id and
+per-cell absolute positions (-1 = padded cell). Decoding requests get their
+row reserved FIRST (admissions can never starve decode), prefill segments
+fill the remaining rows FCFS (``seg_width`` tokens per row, so a chunk of
+``n`` prompt tokens costs ``ceil(n / seg_width)`` block-table gathers instead
+of ``n`` — the kernel attends a whole query segment per row). Each cell
+writes its token's KV into the row's slot blocks and attends causally through
+that slot's block table; rows and cells of the same request are causally
+ordered by position within the same forward (write-then-attend).
+
+**Speculative decoding** (``ServeConfig.speculative``): each decoding
+request's reservation becomes a *verify segment* ``[next_token, d_1 .. d_k]``
+— ``k`` greedy tokens proposed by a low-bit draft model
+(``serving/speculative.py``: one scanned draft dispatch + private per-slot
+paged pool) before the target step. The verify segment occupies
+``ceil((k+1)/seg_width)`` consecutive grid rows — at the default
+``seg_width=1`` that is k+1 flat rows, the SAME forward shape as
+non-speculative serving, so per-row results are bit-identical and greedy
+verification commits exactly the tokens plain greedy decoding would have
+produced (the target's per-position argmaxes, applied via
+``greedy_verify``). Rejected positions **roll back**:
+their cache rows sit above the request's new context horizon (never attended,
+rewritten by the next round's writes), and blocks holding only rejected
+tokens are freed (``BlockAllocator.truncate`` — a shared tail block is only
+decref'd). The draft's own state rewinds via a host-side counter.
 
 **Prefix sharing** (``ServeConfig.prefix_cache``): as prefill fills a block
 completely, the scheduler registers it with the allocator under the chain
@@ -29,12 +44,12 @@ matches an incoming prompt's longest cached full-block prefix, increfs and
 aliases those physical blocks into the new request's table, and sets
 ``prefilled`` past the shared tokens — their prefill compute is skipped
 entirely; only the tail gets fresh blocks. Writes into a block whose
-refcount exceeds 1 (the aliased-last-block case when a prompt is an exact
-multiple of block_size) are **copy-on-write**: the block's pool rows are
-copied device-side across all layers into a fresh block and the table entry
-swapped before the packed step, so ``attention_apply`` and the Pallas
-kernel never see sharing. Deterministic K-Means assignment makes shared KV
-bit-identical to recomputed KV, so sharing never changes sampled tokens.
+refcount exceeds 1 (aliased-last-block, or a verify segment reaching into a
+shared block) are **copy-on-write**: the block's pool rows are copied
+device-side into a fresh block and the table entry swapped before the packed
+step, so ``attention_apply`` and the Pallas kernel never see sharing.
+Deterministic K-Means assignment makes shared KV bit-identical to recomputed
+KV, so sharing never changes sampled tokens.
 
 Preemption is by eviction: when a decoding sequence cannot get a block, the
 most recently admitted *other* request is evicted (blocks decref'd, requeued
@@ -45,9 +60,11 @@ prefix blocks are reclaimed (LRU) by the allocator before any preemption.
 
 Sampling happens host-side from the logits the packed step returns (greedy
 or per-request-keyed temperature): a decoding request samples from its
-decode row; a request whose LAST prompt token was written this step samples
-its first token from that row — per-request keys make sampled outputs
-independent of how steps were packed.
+row's cells; a request whose LAST prompt token was written this step samples
+its first token from that cell — per-request keys make sampled outputs
+independent of how steps were packed. Speculative configs are greedy-only
+(the rejection-sampling hook in speculative.py documents the temperature
+contract and raises until implemented).
 """
 
 from __future__ import annotations
@@ -63,12 +80,16 @@ import numpy as np
 from repro.serving.paged_cache import (
     BlockAllocator,
     PagedCacheConfig,
-    attach_tables,
     blocks_needed,
     chain_hash,
     copy_blocks,
-    detach_tables,
     prefix_seed,
+)
+from repro.serving.speculative import (
+    DraftRunner,
+    greedy_verify,
+    make_packed_fn,
+    rejection_sample,
 )
 
 __all__ = ["RequestState", "Request", "Scheduler"]
@@ -123,21 +144,68 @@ class Scheduler:
     bounds per-request context (prompt + generated), ``block_size`` /
     ``n_blocks`` size the pool (n_blocks=0 -> slots * blocks-per-request, a
     no-preemption default; pass a smaller pool to exercise preemption),
-    ``token_budget`` fixes the packed step's row count (0 -> slots +
-    prefill_chunk; must be >= slots so every decoding slot always fits), and
-    ``prefix_cache`` enables refcounted prefix-block sharing.
+    ``token_budget`` sizes the packed grid (0 -> slots + prefill_chunk,
+    rounded up to ``rows * seg_width`` cells with room for every slot's
+    decode/verify segment), ``seg_width`` packs that many tokens per kernel
+    segment row (default 1, the flat layout — under a speculative config a
+    verify segment then spans k+1 flat rows, keeping forward shapes
+    bit-identical to non-speculative serving), and ``prefix_cache`` enables
+    refcounted prefix-block sharing.
+
+    ``draft`` (speculative configs): ``(model, params)`` or
+    ``(model, params, spec)`` — e.g. a ``load_quantized`` artifact tuple.
     """
 
-    def __init__(self, model, params, sc, slots: int = 8):
+    def __init__(self, model, params, sc, slots: int = 8, draft=None):
         if not model.supports_paged_cache():
             raise ValueError(f"family {model.cfg.family} cannot use the paged scheduler")
         self.model, self.params, self.sc, self.slots = model, params, sc, slots
-        self.token_budget = sc.token_budget or (slots + sc.prefill_chunk)
-        if self.token_budget < slots:
-            raise ValueError(
-                f"token_budget {self.token_budget} < slots {slots}: decode "
-                "reservation needs one row per slot"
+        self.spec = sc.speculative
+        self.draft: DraftRunner | None = None
+        if self.spec is not None:
+            if sc.temperature > 0:
+                rejection_sample()  # greedy-only: raises NotImplementedError
+            if draft is None:
+                raise ValueError(
+                    "speculative serving needs a draft model: pass "
+                    "draft=(model, params[, spec]) or set "
+                    "speculative.draft_artifact on the engine"
+                )
+            dm, dp, dspec = (tuple(draft) + (None,))[:3]
+            if dm.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {dm.cfg.vocab_size} != target vocab "
+                    f"{model.cfg.vocab_size}: verification compares argmaxes"
+                )
+            self.draft = DraftRunner(
+                dm, dp, slots=slots, cache_len=sc.cache_len, k=self.spec.k,
+                block_size=sc.block_size,
+                cache_dtype=jnp.dtype(dspec.kv_dtype if dspec else sc.cache_dtype),
+                kv_quant=(dspec.kv_bits is not None) if dspec else sc.kv_quant,
+                token_budget=self.spec.draft_token_budget,
             )
+        # grid geometry: rows x seg_width cells. Decode reservation needs
+        # every slot's verify segment (k+1 tokens under speculation, 1
+        # otherwise) to fit simultaneously. seg_width only changes how many
+        # cells share one kernel segment row (one block-table gather per
+        # row); it never changes which tokens run — a seg_width=1 grid with
+        # the same cell budget is bit-identical, which is what keeps
+        # speculative greedy exactly equal to non-speculative greedy.
+        self.seg_width = max(1, sc.seg_width)
+        seg_len = (self.spec.k + 1) if self.spec else 1
+        self._dec_rows = -(-seg_len // self.seg_width)  # rows per decode seg
+        base = sc.token_budget or (slots + sc.prefill_chunk)
+        rows = -(-base // self.seg_width)
+        if sc.token_budget == 0:
+            rows = max(rows, slots * self._dec_rows)
+        if rows < slots * self._dec_rows:
+            raise ValueError(
+                f"token_budget {base} gives {rows} segment rows of width "
+                f"{self.seg_width} but decode reservation needs "
+                f"{slots * self._dec_rows} (slots x ceil((k+1)/seg_width))"
+            )
+        self.rows = rows
+        self.token_budget = rows * self.seg_width
         max_blk = blocks_needed(sc.cache_len, sc.block_size)
         n_blocks = sc.n_blocks or slots * max_blk
         self.pcfg = PagedCacheConfig(block_size=sc.block_size, n_blocks=n_blocks,
@@ -165,28 +233,10 @@ class Scheduler:
                       "decode_slot_tokens": 0, "prefill_tokens": 0,
                       "packed_tokens": 0, "prefix_hits": 0,
                       "prefix_hit_tokens": 0, "prefill_skipped": 0,
-                      "cow_copies": 0}
-        self._packed_fn = jax.jit(self._make_packed_step())
+                      "cow_copies": 0, "spec_rounds": 0, "drafted_tokens": 0,
+                      "accepted_tokens": 0, "rolled_back_tokens": 0}
+        self._packed_fn = jax.jit(make_packed_fn(model))
         self._copy_fn = jax.jit(copy_blocks)
-
-    # ------------------------------------------------------------------ jit
-    def _make_packed_step(self):
-        model = self.model
-
-        def packed_step(params, pools, bt, slot_ids, positions, ctx, tokens):
-            """The unified token-budget forward: tokens/positions/ctx/slot_ids
-            are flat (T,) vectors (position -1 = unused row), bt is the
-            per-SLOT (slots, max_blk) block-table matrix. Row t writes
-            tokens[t] at positions[t] into slot_ids[t]'s blocks and attends
-            to that slot's context up to positions[t]; returns per-row
-            next-token logits (T, vocab)."""
-            caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
-                                   model.cfg.scan_layers, token_slots=slot_ids)
-            out = model.apply(params, {"tokens": tokens[:, None]},
-                              positions=positions[:, None], caches=caches)
-            return detach_tables(out.caches), out.logits[:, 0, : model.cfg.vocab_size]
-
-        return packed_step
 
     # ----------------------------------------------------------------- host
     def submit(self, prompt: list[int], max_new_tokens: int,
@@ -253,7 +303,9 @@ class Scheduler:
         With the prefix cache on, the longest chain of cached full blocks is
         aliased (incref) instead of allocated, and ``prefilled`` starts past
         the shared tokens — capped at ``len(context) - 1`` so at least one
-        prompt token is always computed (its logits seed sampling)."""
+        prompt token is always computed (its logits seed sampling). The draft
+        runner never shares that skip: its slot state resets to 0 and the
+        whole prompt replays through the draft on the first proposal."""
         admitted = 0
         bs = self.pcfg.block_size
         while self._queue and self._slot_free:
@@ -269,6 +321,8 @@ class Scheduler:
             r.blocks, r.block_hashes = shared + fresh, hashes
             r.slot, r.state = self._slot_free.pop(), RequestState.RUNNING
             r.prefilled = min(len(shared) * bs, len(r.context) - 1)
+            if self.draft is not None:
+                self.draft.reset(r.slot)
             if shared:
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_hit_tokens"] += len(shared) * bs
@@ -300,58 +354,92 @@ class Scheduler:
         return ids, hashes
 
     # ------------------------------------------------------------ packed step
-    def _packed_once(self, results: dict) -> None:
-        """Assemble and run one token-budget forward.
+    def _k_for(self, r: Request) -> int:
+        """Draft tokens to propose for ``r`` this round: the configured k,
+        clipped so verification can never commit past the request's remaining
+        generation budget (which also bounds every write below cache_len —
+        ``submit`` checked prompt + max_new against the pool geometry)."""
+        if self.spec is None:
+            return 0
+        return max(0, min(self.spec.k,
+                          r.max_new_tokens - len(r.generated) - 1))
 
-        Budget policy: decode rows FIRST (one per decoding slot — a step can
-        never stall decode to admit), then prefill segments FCFS over the
-        remaining budget (a request's segment is its next unwritten context
-        tokens, clipped to what fits; large prompts span several steps).
+    def _packed_once(self, results: dict) -> None:
+        """Assemble and run one token-budget grid forward.
+
+        Budget policy: decode/verify segments FIRST (``ceil((k+1)/seg_width)``
+        rows per decoding slot — a step can never stall decode to admit),
+        then prefill segments FCFS over the remaining rows (a request's next
+        unwritten context tokens, packed ``seg_width`` per row, clipped to
+        the rows that fit; large prompts span several steps).
         """
-        t_budget = self.token_budget
+        S = self.seg_width
         while True:
-            # decode reservation: guarantee a block for each incoming token
+            # decode reservation: guarantee blocks for every incoming token
             # (may preempt — victims leave self._running, incl. prefilling)
             for r in list(self._running):
                 if r.state is RequestState.RUNNING and r.decoding:
-                    self._grow(r)
+                    self._grow(r, self._k_for(r) + 1)
             if not self._running:
                 return
             decoders = [r for r in self._running if r.decoding]
             segments: list[tuple[Request, int, int]] = []  # (request, start, n)
-            budget = t_budget - len(decoders)
+            rows_left = self.rows - len(decoders) * self._dec_rows
             for r in self._running:
-                if budget <= 0:
+                if rows_left <= 0:
                     break
                 if not r.decoding:
-                    n = min(budget, len(r.context) - r.prefilled)
+                    n = min(rows_left * S, len(r.context) - r.prefilled)
                     segments.append((r, r.prefilled, n))
-                    budget -= n
+                    rows_left -= -(-n // S)
             if self._cow_pass(decoders, segments):
                 break  # no preemption mid-pass: the plan above is still live
 
+        # draft proposal AFTER the plan is stable (growth/COW preemptions are
+        # done, so no proposal is wasted on an evicted request); the draft
+        # pool is private, so proposing cannot invalidate the plan
+        drafts: dict[int, list[int]] = {}
+        if self.draft is not None and decoders:
+            drafts = self.draft.propose(
+                [(r.rid, r.slot, r.context, r.next_token, self._k_for(r))
+                 for r in decoders])
+
         max_blk = self.pcfg.max_blocks_per_seq
         bt = np.full((self.slots, max_blk), -1, np.int32)
-        slot_ids = np.zeros((t_budget,), np.int32)
-        pos = np.full((t_budget,), -1, np.int32)
-        tok = np.zeros((t_budget,), np.int32)
+        slot_ids = np.zeros((self.rows,), np.int32)
+        pos = np.full((self.rows, S), -1, np.int32)
+        tok = np.zeros((self.rows, S), np.int32)
         for r in self._running:
             bt[r.slot] = self._bt_row(r)
         row = 0
-        decode_row: dict[int, int] = {}
+
+        def fill(seq, start_pos, slot):
+            """Pack one request's token run into consecutive grid cells
+            starting on a fresh row; returns the cell coordinates."""
+            nonlocal row
+            cells = []
+            for j, t in enumerate(seq):
+                rr, cc = row + j // S, j % S
+                slot_ids[rr] = slot
+                pos[rr, cc] = start_pos + j
+                tok[rr, cc] = t
+                cells.append((rr, cc))
+            row += -(-len(seq) // S)
+            return cells
+
+        # decode/verify segments first (the reservation above sized them in),
+        # then prefill segments over the remaining rows
+        verify_cells: dict[int, list] = {}
         for r in decoders:
-            slot_ids[row], pos[row], tok[row] = r.slot, len(r.context), r.next_token
-            decode_row[r.rid] = row
-            row += 1
-        last_row: dict[int, int] = {}
+            verify_cells[r.rid] = fill([r.next_token] + drafts.get(r.rid, []),
+                                       len(r.context), r.slot)
+        last_cell: dict[int, tuple[int, int]] = {}
+        n_prefill = 0
         for r, start, n in segments:
-            sl = slice(row, row + n)
-            slot_ids[sl] = r.slot
-            pos[sl] = np.arange(start, start + n)
-            tok[sl] = r.context[start : start + n]
-            last_row[r.rid] = row + n - 1
-            row += n
-        ctx = pos + 1  # write/attend horizon per row (-1 rows stay invalid)
+            last_cell[r.rid] = fill(r.context[start : start + n], start,
+                                    r.slot)[-1]
+            n_prefill += n
+        ctx = pos.max(axis=1) + 1  # per-row horizon (all-pad rows stay 0)
 
         self.pools, logits = self._packed_fn(
             self.params, self.pools, jnp.asarray(bt), jnp.asarray(slot_ids),
@@ -360,46 +448,92 @@ class Scheduler:
 
         st = self.stats
         st["packed_steps"] += 1
-        st["packed_tokens"] += row
-        st["decode_slot_tokens"] += len(decoders)
-        st["prefill_tokens"] += sum(n for _, _, n in segments)
+        st["packed_tokens"] += int((pos >= 0).sum())
+        st["prefill_tokens"] += n_prefill
         st["prefill_chunks"] += len(segments)
         if decoders:
             st["decode_steps"] += 1
         if decoders and segments:
             st["mixed_steps"] += 1
 
+        if self.spec is not None and decoders:
+            # one device->host transfer of every verify argmax
+            am = np.asarray(jnp.argmax(logits, axis=-1))
         for r in decoders:
+            cells = verify_cells[r.rid]
             r.context.append(r.next_token)
-            r.prefilled += 1  # the decode row wrote it to the cache
-            r.next_token = self._sample(logits[decode_row[r.rid]], r)
-            r.generated.append(r.next_token)
+            r.prefilled += 1  # the segment's first cell wrote it to the cache
+            if self.spec is None:
+                rw, cc = cells[0]
+                r.next_token = self._sample(logits[rw, cc], r)
+                r.generated.append(r.next_token)
+                st["decode_slot_tokens"] += 1
+                continue
+            d = drafts.get(r.rid, [])
+            committed = greedy_verify([int(am[rr, cc]) for rr, cc in cells], d,
+                                      r.eos_id)
+            # all committed-but-last tokens have valid KV already in the
+            # cache (their cells matched the drafts written this step); the
+            # last one is the new pending next_token
+            r.context.extend(committed[:-1])
+            r.prefilled += len(committed) - 1
+            r.next_token = committed[-1]
+            r.generated.extend(committed)
+            # acceptance accounting: every committed-but-last token matched
+            # its draft by construction; the last counts too when it is an
+            # EOS that agreed with its draft (committed, just absorbing)
+            n_acc = len(committed) - 1
+            if n_acc < len(d) and committed[-1] == d[n_acc]:
+                n_acc += 1
+            st["spec_rounds"] += 1
+            st["drafted_tokens"] += len(d)
+            st["accepted_tokens"] += n_acc
+            st["rolled_back_tokens"] += len(d) - n_acc
+            st["decode_slot_tokens"] += len(committed)
+            self._rollback(r)
+            self.draft.sync(r.slot, len(r.context))
         for r, start, n in segments:
             r.prefilled = start + n
             if r.decoding and r.next_token is None:
                 # the prompt's real last token was in this step: its logits
-                # row is the first sampled token (a re-admitted preemption
+                # cell is the first sampled token (a re-admitted preemption
                 # keeps its already-decided next_token instead)
-                r.next_token = self._sample(logits[last_row[r.rid]], r)
+                rw, col = last_cell[r.rid]
+                r.next_token = self._sample(logits[rw, col], r)
                 r.generated.append(r.next_token)
         for r in self._running:
             self._register_full_blocks(r)  # publish before anyone finishes
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
 
+    def _rollback(self, r: Request) -> None:
+        """Free the blocks a verify segment grew that now hold only rejected
+        draft tokens: everything past ``blocks_needed(len(context) + 1)``
+        (context plus the pending next_token write — the admission-time
+        reservation invariant). Rejected writes *inside* a kept block need no
+        cleanup: they sit above the context horizon, are masked out of every
+        read, and are overwritten by the next round's writes. Freed tail
+        blocks are never registered (registration stops at ``prefilled``) and
+        never shared (aliasing only covers prompt blocks), so the truncate is
+        a plain decref to the free list."""
+        keep = blocks_needed(len(r.context) + 1, self.pcfg.block_size)
+        if len(r.blocks) > keep:
+            r.blocks = self.allocator.truncate(r.blocks, keep)
+
     def _cow_pass(self, decoders, segments) -> bool:
         """Copy-on-write: any block this step will write into whose refcount
-        exceeds 1 (a shared prefix block — the aliased-last-block case) is
-        replaced by a private device-side copy before the packed step runs,
-        so the write can never leak into another request's context. Returns
-        False if making room for a copy preempted somebody — the caller's
-        decode/segment plan is stale and must be recomputed (the swaps done
-        so far remain valid: the blocks are now private)."""
+        exceeds 1 (a shared prefix block — the aliased-last-block case, or a
+        verify segment reaching into one) is replaced by a private
+        device-side copy before the packed step runs, so the write can never
+        leak into another request's context. Returns False if making room for
+        a copy preempted somebody — the caller's decode/segment plan is stale
+        and must be recomputed (the swaps done so far remain valid: the
+        blocks are now private)."""
         writes: list[tuple[Request, int, int]] = []  # (request, lo blk, hi blk)
         bs = self.pcfg.block_size
         for r in decoders:
-            j = len(r.context) // bs
-            writes.append((r, j, j))
+            n0 = len(r.context)
+            writes.append((r, n0 // bs, (n0 + self._k_for(r)) // bs))
         for r, start, n in segments:
             writes.append((r, start // bs, (start + n - 1) // bs))
         copies: list[tuple[Request, int, int]] = []  # (request, src, dst)
@@ -438,13 +572,15 @@ class Scheduler:
                                        np.asarray(dst, np.int32))
         return plan_live
 
-    def _grow(self, r: Request) -> None:
-        """Guarantee a block for position len(r.context) (the token about to
-        be written), evicting the youngest other request if the pool is dry."""
-        if blocks_needed(len(r.context) + 1, self.pcfg.block_size) <= len(r.blocks):
-            return
-        got, _ = self._alloc_one(r)
-        r.blocks.append(got)
+    def _grow(self, r: Request, n_tokens: int = 1) -> None:
+        """Guarantee blocks for positions ``len(context) .. len(context) +
+        n_tokens - 1`` (the cells about to be written — one decode token, or
+        a whole verify segment), evicting the youngest other request if the
+        pool is dry."""
+        while blocks_needed(len(r.context) + n_tokens,
+                            self.pcfg.block_size) > len(r.blocks):
+            got, _ = self._alloc_one(r)
+            r.blocks.append(got)
 
     def _alloc_one(self, r: Request) -> tuple[int, bool]:
         """One block for ``r``, preempting the youngest *other* request until
@@ -469,7 +605,10 @@ class Scheduler:
     def _register_full_blocks(self, r: Request) -> None:
         """Publish every newly-FULL block of ``r`` under its chain hash so
         later admissions can alias it (first writer wins; blocks aliased at
-        admission arrive pre-hashed in r.block_hashes and are skipped)."""
+        admission arrive pre-hashed in r.block_hashes and are skipped).
+        ``prefilled`` only ever counts verified/committed tokens, so a block
+        is published iff every one of its rows holds accepted context — a
+        rejected speculative write can never leak into the prefix cache."""
         if not self.allocator.prefix_cache:
             return
         bs = self.pcfg.block_size

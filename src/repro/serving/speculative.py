@@ -1,0 +1,348 @@
+"""Speculative decoding: low-bit K-Means draft model + multi-token verification.
+
+KLLM's accuracy headroom at very low bit-widths makes a W3/A4 artifact of the
+*same* model (one QuantSpec away) a nearly-free **draft model**: per serving
+round, each decoding request drafts ``k`` greedy tokens with the cheap draft,
+then the target model verifies all ``k + 1`` positions as ONE multi-token
+segment through the scheduler's packed token-budget step — committing between
+1 and ``k + 1`` tokens per target forward instead of exactly 1.
+
+Division of labour:
+
+* :class:`DraftRunner` (here) owns the draft model's state: a private paged
+  KV pool with **static per-slot block tables** (slot ``s`` owns blocks
+  ``[s*max_blk, (s+1)*max_blk)`` — no allocator, no sharing, rollback is a
+  host-side counter rewind). ``propose`` catches the draft cache up on every
+  context token it has not seen (a new admission replays its whole prompt;
+  the draft never aliases the target's prefix cache), then drafts ``k``
+  tokens autoregressively, one packed step per token.
+* The **scheduler** (scheduler.py) builds each decoder's verify segment
+  ``[next_token, d_1 .. d_k]`` at positions ``n .. n+k``, runs it through the
+  same packed forward as everything else (consecutive grid cells: flat rows
+  at ``seg_width=1`` — bit-identical shapes to non-speculative serving — or
+  the S>1 paged-attention layout),
+  and applies :func:`greedy_verify` to the per-position argmaxes. Rejected
+  positions are **rolled back**: the cache rows they wrote are overwritten by
+  the next (correct) writes before they can ever be attended (reads are
+  gated by ``ctx_lens`` and per-token causal masks), and blocks holding only
+  rejected tokens are freed (``BlockAllocator.truncate``).
+
+Greedy verification is **exact**: token ``g_i = argmax`` of the target's
+logits after consuming position ``i`` is, by construction, precisely the
+token non-speculative greedy decoding would have produced given the same
+prefix — accepted drafts merely reveal several such argmaxes per forward.
+Speculative greedy output is therefore token-identical to ``speculative=None``
+(asserted in tests/test_speculative.py and bench_serving --smoke), no matter
+how bad the draft is; draft quality only moves the acceptance rate.
+
+Temperature sampling needs the rejection-sampling acceptance rule; the
+:func:`rejection_sample` hook documents the contract and raises until it is
+implemented — the scheduler refuses ``temperature > 0`` up front.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qlinear import QLinearConfig
+from repro.core.quantspec import QuantSpec
+from repro.serving.paged_cache import attach_tables, blocks_needed, detach_tables
+
+__all__ = ["SpeculativeConfig", "DraftRunner", "greedy_verify", "rejection_sample",
+           "make_packed_fn", "load_draft", "DEFAULT_DRAFT_SPEC"]
+
+
+# Default draft policy: W3 K-Means weights everywhere except a W4 guard on
+# the most CE-sensitive projection — benchmarks/bench_sensitivity.py ranks
+# the projection classes by held-out CE impact under bit-width stress, and
+# mlp/wi tops it (the guarded W3 draft beat both the unguarded and the
+# down-proj-guarded variants there) — plus A4 activations and int4 K-Means
+# draft KV (cheap draft cache state). ~25% smaller weight bytes than W4 and
+# no outlier path on the draft's hot loop.
+DEFAULT_DRAFT_SPEC = QuantSpec(
+    base=QLinearConfig(w_bits=3, a_bits=4, detection="none"),
+    rules=[("mlp/wi", {"w_bits": 4})],
+    kv_bits=4, kv_dtype="float32",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """``ServeConfig.speculative``: None = off, an instance = on.
+
+    ``k``: draft tokens proposed per decoding request per round (the target
+    verifies ``k + 1`` positions; commits 1..k+1 tokens). Each decoding
+    request's packed-step reservation grows from 1 cell to ``k + 1`` cells.
+    ``draft_artifact``: directory for ``repro.core.artifact.load_quantized``
+    (the production path). Tests/benchmarks may instead hand the engine a
+    built draft via ``ServingEngine(..., draft=(model, params))``.
+    ``draft_token_budget``: rows of the draft's packed step (catch-up prefill
+    throughput); 0 -> ``slots + 32``.
+    """
+
+    k: int = 3
+    draft_artifact: str | None = None
+    draft_token_budget: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculative k must be >= 1, got {self.k}")
+
+
+def make_packed_fn(model):
+    """The packed segment forward shared by the target scheduler and the
+    draft runner. All arguments are fixed-shape per engine:
+
+      slot_ids  (G,)    scheduler slot of each segment row
+      positions (G, S)  absolute token positions (-1 = padded cell)
+      ctx       (G,)    write/attend horizon per row (last valid pos + 1)
+      tokens    (G, S)  token ids (garbage in padded cells)
+
+    Row ``g`` writes its valid tokens' KV into ``slot_ids[g]``'s blocks and
+    attends each token causally through that slot's block table (the S>1
+    paged-attention layout: per-row block-table gather happens device-side in
+    ``attention_apply``, one gather per *segment* rather than per token).
+    Returns (pools, logits (G, S, vocab))."""
+
+    def packed_step(params, pools, bt, slot_ids, positions, ctx, tokens):
+        caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
+                               model.cfg.scan_layers, token_slots=slot_ids)
+        out = model.apply(params, {"tokens": tokens}, positions=positions,
+                          caches=caches)
+        return detach_tables(out.caches), out.logits[..., : model.cfg.vocab_size]
+
+    return packed_step
+
+
+def greedy_verify(targets: list[int], drafts: list[int],
+                  eos_id: int | None = None) -> list[int]:
+    """Greedy acceptance rule. ``targets[i]`` is the target model's argmax
+    after consuming verify position ``i`` (position 0 carries the committed
+    ``next_token``, positions 1..k the drafts); ``len(targets) == k + 1``.
+
+    Returns the **committed** tokens, in order: every leading target token
+    that agrees with its draft (their KV writes are already valid), plus one
+    final token — the first disagreement (the "correction"), the bonus token
+    after a full match, or an EOS (absorbing: nothing is committed past it).
+    Always commits at least one token; the last committed token is the
+    request's new ``next_token`` (fed to the cache next round), the rest
+    extend its context directly.
+    """
+    committed: list[int] = []
+    for i, g in enumerate(targets):
+        committed.append(int(g))
+        if eos_id is not None and g == eos_id:
+            break  # absorbing: later matches would decode past EOS
+        if i >= len(drafts) or g != drafts[i]:
+            break  # correction (or the bonus token after k acceptances)
+    return committed
+
+
+def rejection_sample(*_args, **_kw):
+    """Temperature-sampling acceptance hook (NOT yet implemented).
+
+    Contract (Leviathan-style speculative sampling): accept draft ``d_i``
+    with probability ``min(1, p_target(d_i) / p_draft(d_i))``; on rejection
+    sample the correction from the residual ``max(0, p_target - p_draft)``
+    renormalized, which keeps the committed stream distributed exactly as
+    target-only sampling. Requires the draft's per-position probabilities to
+    ride along with the proposed tokens. Until then the scheduler only
+    accepts ``temperature == 0`` speculative configs.
+    """
+    raise NotImplementedError(
+        "speculative decoding with temperature > 0 needs the "
+        "rejection-sampling acceptance rule (accept d_i w.p. "
+        "min(1, p_target/p_draft), resample the correction from the "
+        "residual); only greedy verification is implemented — serve with "
+        "temperature=0 or speculative=None"
+    )
+
+
+def load_draft(directory: str):
+    """Load a draft artifact -> (model, params, spec) for the scheduler."""
+    from repro.core.artifact import load_quantized  # lazy: keep import light
+
+    art = load_quantized(directory)
+    return art.model, art.params, art.spec
+
+
+class DraftRunner:
+    """The draft model's serving state, mirrored onto the target scheduler's
+    slots. Two jitted forwards — a packed catch-up step (``budget`` S=1 rows)
+    and a **scanned draft loop** (one dispatch running all ``k + 1``
+    autoregressive single-token forwards inside ``lax.scan``) — over a
+    private paged pool, plus a host-side per-slot ``pos`` counter: the number
+    of leading cache positions whose contents agree with the request's
+    current context.
+
+    The scanned loop is what makes drafting pay for itself: per verify round
+    the draft costs ONE device dispatch (k+1 tiny forwards fused), so a round
+    is 2 dispatches (draft + target) for 1..k+1 committed tokens per decoder,
+    versus one full packed step per token without speculation — the win
+    survives even dispatch-overhead-dominated CPU shapes.
+
+    Rollback is the counter: after verification the scheduler calls
+    ``sync(slot, len(context))``; rejected draft rows above the new context
+    are simply rewritten by the next round's catch-up/drafting writes before
+    anything can attend to them (paged reads are gated by ``ctx_lens`` and
+    the per-token causal mask, so a stale row above the horizon is
+    invisible). ``reset`` (new admission to the slot) rewinds to 0 — the
+    draft replays the whole prompt; it never aliases the target's prefix
+    cache, whose pool it does not share.
+    """
+
+    def __init__(self, model, params, *, slots: int, cache_len: int, k: int,
+                 block_size: int = 16, cache_dtype=jnp.float32,
+                 kv_quant: bool = False, token_budget: int = 0):
+        if not model.supports_paged_cache():
+            raise ValueError(
+                f"draft family {model.cfg.family} cannot back a paged draft pool"
+            )
+        self.model, self.params, self.k = model, params, k
+        self.slots = slots
+        # headroom: the scanned loop writes up to position n + k for a row
+        # whose own horizon stops earlier (k_r < k near a budget end) — those
+        # cells must land in real blocks, never clip into a neighbour
+        draft_len = cache_len + k + 1
+        self.max_blk = blocks_needed(draft_len, block_size)
+        n_blocks = slots * self.max_blk
+        self.pools = model.init_caches(
+            slots, draft_len, jnp.dtype(cache_dtype), quantized=kv_quant,
+            layout="paged", block_size=block_size, n_blocks=n_blocks,
+        )
+        # static ownership: slot s owns blocks [s*max_blk, (s+1)*max_blk) —
+        # the table never changes, so there is no allocator to keep safe
+        self._bt = jnp.asarray(
+            np.arange(n_blocks, dtype=np.int32).reshape(slots, self.max_blk))
+        # catch-up rows per dispatch; the scanned draft loop itself always
+        # runs a fixed `slots`-row shape, so any positive budget is valid
+        # (smaller = less memory, more catch-up dispatches per long prompt)
+        self.budget = token_budget or (slots + 32)
+        if self.budget < 1:
+            raise ValueError(
+                f"draft_token_budget must be >= 1, got {self.budget}"
+            )
+        self.pos = [0] * slots  # valid draft-cache positions per slot
+        self._catch_fn = jax.jit(make_packed_fn(model))
+        self._draft_fn = jax.jit(self._make_draft_loop())
+        self.steps = 0  # draft device dispatches (engine stats)
+
+    def _make_draft_loop(self):
+        """One dispatch = k+1 scanned single-token forwards over all slots.
+
+        Iteration j feeds each row's current token at position ``pos`` and
+        proposes the next via argmax: starting from (next_token, n) this
+        yields d_1 .. d_{k+1} while writing next_token, d_1 .. d_k to the
+        draft cache — the extra (k+1)-th iteration's write is what keeps a
+        fully-accepted request's draft cache caught up without a separate
+        catch-up dispatch next round (its proposal is discarded). Padded rows
+        carry pos = -1: their writes are dropped and their argmaxes ignored.
+        """
+        packed = make_packed_fn(self.model)
+        k = self.k
+
+        def draft_loop(params, pools, bt, slot_ids, tok0, pos0):
+            def body(carry, _):
+                pools, tok, pos = carry
+                valid = pos >= 0
+                ctx = jnp.where(valid, pos + 1, 0)
+                pools, logits = packed(params, pools, bt, slot_ids,
+                                       pos[:, None], ctx, tok[:, None])
+                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                return (pools, nxt, jnp.where(valid, pos + 1, -1)), nxt
+
+            (pools, _, _), drafts = jax.lax.scan(
+                body, (pools, tok0, pos0), None, length=k + 1)
+            return pools, drafts  # (k+1, R); row k is the discarded lookahead
+
+        return draft_loop
+
+    # ------------------------------------------------------------- lifecycle
+    def reset(self, slot: int) -> None:
+        """New occupant for ``slot``: nothing in the draft cache is valid."""
+        self.pos[slot] = 0
+
+    def sync(self, slot: int, n_valid: int) -> None:
+        """Post-verification rollback: positions >= n_valid were rejected
+        drafts (or never written) — rewind so catch-up rewrites them."""
+        self.pos[slot] = min(self.pos[slot], n_valid)
+
+    # -------------------------------------------------------------- proposal
+    def propose(self, reqs: list[tuple[int, int, list[int], int, int]],
+                ) -> dict[int, list[int]]:
+        """Draft up to ``k`` greedy tokens per request.
+
+        ``reqs``: (rid, slot, context, next_token, k_r) per decoding
+        request — ``context`` is every token already committed to the target
+        cache and ``next_token`` the sampled-but-unwritten token the verify
+        segment will start with. Returns {rid: [d_1 .. d_{k_r}]} (k_r = 0
+        entries omitted; such rows still ride the loop so their
+        ``next_token`` write keeps the draft cache warm).
+
+        Catch-up first: context tokens the draft cache has not seen are
+        packed FCFS into ``budget``-row steps (a fresh admission replays its
+        whole prompt here; steady state needs none). Then ONE scanned
+        dispatch drafts autoregressively for every decoding row at once.
+        Draft sampling is argmax — greedy verification's acceptance test is
+        an argmax comparison, so a sampled draft would only lower the
+        acceptance rate.
+        """
+        if not reqs:
+            return {}
+        T = self.budget
+
+        # catch-up: feed unseen context tokens (logits unused — the scanned
+        # loop below starts from next_token, which is never behind)
+        pending = []
+        for _rid, slot, context, _nt, _k in reqs:
+            if self.pos[slot] < len(context):
+                pending.append([slot, list(context[self.pos[slot]:]),
+                                self.pos[slot]])
+        while pending:
+            slot_ids = np.zeros((T,), np.int32)
+            pos = np.full((T, 1), -1, np.int32)
+            tok = np.zeros((T, 1), np.int32)
+            row, leftover = 0, []
+            for item in pending:
+                slot, toks, start = item
+                if row >= T:
+                    leftover.append(item)
+                    continue
+                n = min(T - row, len(toks))
+                sl = slice(row, row + n)
+                slot_ids[sl] = slot
+                pos[sl, 0] = np.arange(start, start + n)
+                tok[sl, 0] = toks[:n]
+                if n < len(toks):
+                    leftover.append([slot, toks[n:], start + n])
+                row += n
+            self.pools, _ = self._catch_fn(
+                self.params, self.pools, self._bt, jnp.asarray(slot_ids),
+                jnp.asarray(pos), jnp.asarray(pos[:, 0] + 1), jnp.asarray(tok),
+            )
+            self.steps += 1
+            pending = leftover
+
+        # one scanned dispatch: k+1 fused AR steps across all decoding rows
+        slot_ids = np.zeros((self.slots,), np.int32)
+        tok0 = np.zeros((self.slots,), np.int32)
+        pos0 = np.full((self.slots,), -1, np.int32)
+        for row, (_rid, slot, context, next_token, _k) in enumerate(reqs):
+            slot_ids[row], tok0[row], pos0[row] = slot, next_token, len(context)
+        self.pools, dr = self._draft_fn(
+            self.params, self.pools, self._bt, jnp.asarray(slot_ids),
+            jnp.asarray(tok0), jnp.asarray(pos0),
+        )
+        self.steps += 1
+        dr = np.asarray(dr)  # (k+1, slots)
+        drafts: dict[int, list[int]] = {}
+        for row, (rid, slot, context, _nt, k_r) in enumerate(reqs):
+            if k_r > 0:
+                drafts[rid] = [int(dr[j, row]) for j in range(k_r)]
+            # cache holds context + next_token + d_1..d_k for this row
+            self.pos[slot] = len(context) + self.k + 1
+        return drafts

@@ -1,5 +1,6 @@
-"""Allocator-safety fuzz: random admit / alias / grow / decref / double-free
-sequences against the refcounted prefix-sharing ``BlockAllocator``.
+"""Allocator-safety fuzz: random admit / alias / grow / truncate / decref /
+double-free sequences against the refcounted prefix-sharing
+``BlockAllocator``.
 
 The op interpreter (``_run_ops``) checks, after EVERY operation, the two
 invariants refcounted sharing depends on (ISSUE 4):
@@ -78,6 +79,20 @@ def _run_ops(n_blocks: int, ops: list[tuple[int, int]]) -> None:
                 with pytest.raises(ValueError):
                     a.free([unheld[x % len(unheld)]])
                 assert a.n_free == before, "rejected free mutated the pool"
+        elif op == 6 and live:  # speculative rollback: truncate a suffix
+            rid = sorted(live)[x % len(live)]
+            keep = x % (len(live[rid]) + 1)
+            dropped = live[rid][keep:]
+            # rollback may reach INTO a shared (refcount > 1) block — the
+            # truncate must only drop this holder's reference, never the
+            # donor's; a registered dropped block must stay matchable
+            shared = [b for b in dropped if a.refcount(b) > 1]
+            live[rid] = a.truncate(live[rid], keep)
+            assert len(live[rid]) == keep
+            for b in shared:
+                assert a.refcount(b) >= 1, (
+                    f"truncate killed shared block {b} out from under a holder"
+                )
         held = [b for ids in live.values() for b in ids]
         for b in range(n_blocks):
             assert a.refcount(b) == held.count(b), (

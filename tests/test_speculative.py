@@ -1,0 +1,329 @@
+"""Speculative-decoding subsystem tests: greedy verification semantics
+(unit), token-identity of speculative greedy output with the non-speculative
+scheduler (mixed online traffic, prefix sharing on AND off, int4 KV pool,
+preemption, EOS mid-verify), rollback block accounting (allocator invariants
+under seeded random speculative traffic), the draft-artifact load path,
+segment-aware prefill packing (seg_width > 1 without speculation), and the
+greedy-only temperature gate."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core.qlinear import QLinearConfig
+from repro.core.quantspec import QuantSpec
+from repro.models.model import build, quantize_model
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.speculative import (DEFAULT_DRAFT_SPEC, SpeculativeConfig,
+                                       greedy_verify)
+
+QSPEC = QuantSpec(base=QLinearConfig(detection="none"))
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_smoke_config("llama3_2_1b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, quantize_model(model, params, QSPEC)
+
+
+@pytest.fixture(scope="module")
+def w3_draft(small_lm):
+    """The low-bit draft: the SAME model one QuantSpec away (W3/A4, int4 KV)."""
+    cfg, model, params, _ = small_lm
+    return model, quantize_model(model, params, DEFAULT_DRAFT_SPEC), \
+        DEFAULT_DRAFT_SPEC
+
+
+def _mk(model, qp, *, spec=None, draft=None, cache_len=64, block_size=8,
+        slots=3, prefix_cache=True, kv_quant=False, n_blocks=0,
+        token_budget=0, seg_width=1, temperature=0.0):
+    return ServingEngine(
+        model, qp,
+        ServeConfig(cache_len=cache_len, cache_dtype="float32",
+                    block_size=block_size, prefill_chunk=4, kv_quant=kv_quant,
+                    n_blocks=n_blocks, token_budget=token_budget,
+                    seg_width=seg_width, prefix_cache=prefix_cache,
+                    temperature=temperature, speculative=spec),
+        batch_slots=slots, draft=draft,
+    )
+
+
+# ---------------------------------------------------------------------------
+# greedy verification rule (pure)
+# ---------------------------------------------------------------------------
+
+def test_greedy_verify_semantics():
+    # full acceptance: k matches + the bonus token
+    assert greedy_verify([5, 6, 7, 9], [5, 6, 7]) == [5, 6, 7, 9]
+    # first mismatch stops: the correction is committed, the rest discarded
+    assert greedy_verify([5, 8, 7, 9], [5, 6, 7]) == [5, 8]
+    assert greedy_verify([4, 6, 7, 9], [5, 6, 7]) == [4]
+    # k = 0 (no drafts): plain decode, one committed token
+    assert greedy_verify([3], []) == [3]
+    # EOS is absorbing even when it matches the draft
+    assert greedy_verify([5, 0, 7, 9], [5, 0, 7], eos_id=0) == [5, 0]
+    # EOS as the bonus token
+    assert greedy_verify([5, 6, 7, 0], [5, 6, 7], eos_id=0) == [5, 6, 7, 0]
+    # every committed prefix token equals its draft (cache-validity invariant)
+    for targets, drafts in [([5, 6, 7, 9], [5, 6, 7]), ([5, 8, 7, 9], [5, 6, 7])]:
+        committed = greedy_verify(targets, drafts)
+        assert committed[:-1] == drafts[: len(committed) - 1]
+
+
+# ---------------------------------------------------------------------------
+# token identity: the tentpole acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_spec_identical_mixed_online_traffic_prefix_on_and_off(small_lm, w3_draft):
+    """Greedy speculative output == non-speculative greedy on mixed traffic
+    with online arrivals, with prefix sharing both ON and OFF — regardless
+    of draft quality (the W3 draft rejects plenty on this untrained model)."""
+    cfg, model, params, qp = small_lm
+    system = [3, 1, 4, 1, 5, 9, 2, 6]  # one shared full block at bs=8
+    prompts = [system + [40 + i, 50 + i] for i in range(3)] + \
+              [[(7 * i + j) % cfg.vocab_size or 1 for j in range(n)]
+               for i, n in enumerate([13, 2, 9])]
+    budgets = [5, 8, 3, 6, 2, 7]
+    for prefix_cache in (True, False):
+        base = _mk(model, qp, prefix_cache=prefix_cache)
+        sched = base.scheduler
+        want, rid_of = {}, {}
+        rid_of[sched.submit(prompts[0], budgets[0], salt=0)] = 0
+        rid_of[sched.submit(prompts[1], budgets[1], salt=1)] = 1
+        nxt, steps, res = 2, 0, {}
+        while sched.step(res) or nxt < len(prompts):
+            steps += 1
+            if nxt < len(prompts) and steps % 2 == 0:
+                rid_of[sched.submit(prompts[nxt], budgets[nxt], salt=nxt)] = nxt
+                nxt += 1
+        want = {rid_of[r]: v for r, v in res.items()}
+
+        eng = _mk(model, qp, spec=SpeculativeConfig(k=3), draft=w3_draft,
+                  prefix_cache=prefix_cache)
+        sched = eng.scheduler
+        rid_of, res = {}, {}
+        rid_of[sched.submit(prompts[0], budgets[0], salt=0)] = 0
+        rid_of[sched.submit(prompts[1], budgets[1], salt=1)] = 1
+        nxt, steps = 2, 0
+        while sched.step(res) or nxt < len(prompts):
+            steps += 1
+            if nxt < len(prompts) and steps % 2 == 0:
+                rid_of[sched.submit(prompts[nxt], budgets[nxt], salt=nxt)] = nxt
+                nxt += 1
+        got = {rid_of[r]: v for r, v in res.items()}
+        assert got == want, f"prefix_cache={prefix_cache}"
+        st = eng.stats
+        assert st["drafted_tokens"] > 0 and st["spec_rounds"] > 0
+        if prefix_cache:
+            assert st["prefix_hit_tokens"] > 0  # sharing really engaged
+
+
+def test_spec_identity_draft_accepts_everything(small_lm):
+    """A draft with the target's own params always agrees with the target's
+    argmax, so every drafted token is accepted (acceptance rate 1.0) and each
+    verify round commits k + 1 tokens."""
+    cfg, model, params, qp = small_lm
+    prompts = [[1, 2, 3, 4, 5], [6, 9], [7, 8, 9, 10]]
+    want = _mk(model, qp).generate(prompts, max_new_tokens=8)
+    eng = _mk(model, qp, spec=SpeculativeConfig(k=3), draft=(model, qp))
+    assert eng.generate(prompts, max_new_tokens=8) == want
+    st = eng.stats
+    assert st["accepted_tokens"] == st["drafted_tokens"] > 0
+    assert st["rolled_back_tokens"] == 0
+    assert st["acceptance_rate"] == 1.0
+    # full acceptance: decoding a budget of 8 takes ~2 verify rounds, not 8
+    assert st["spec_rounds"] < 8 * len(prompts)
+
+
+def test_spec_partial_acceptance_rolls_back(small_lm, w3_draft):
+    """The W3 draft disagrees often on an untrained model: rollbacks must
+    fire, counters must reconcile, and output must still be identical."""
+    cfg, model, params, qp = small_lm
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [4, 5], [6, 9, 1]]
+    want = _mk(model, qp).generate(prompts, max_new_tokens=10)
+    eng = _mk(model, qp, spec=SpeculativeConfig(k=3), draft=w3_draft)
+    got = eng.generate(prompts, max_new_tokens=10)
+    assert got == want
+    st = eng.stats
+    assert st["rolled_back_tokens"] > 0, "W3 draft never disagreed (suspicious)"
+    assert st["drafted_tokens"] == st["accepted_tokens"] + st["rolled_back_tokens"]
+    # generated tokens reconcile: each request's first token is sampled at
+    # prefill completion, then every verify round commits accepted + 1
+    assert sum(len(o) for o in got) == \
+        st["accepted_tokens"] + st["spec_rounds"] + len(prompts)
+    assert 0.0 < st["acceptance_rate"] < 1.0
+
+
+def test_spec_eos_mid_verify_is_absorbing(small_lm):
+    """An EOS accepted (or corrected to) mid-segment finishes the request:
+    outputs are exactly max_new_tokens, eos-padded, identical to non-spec."""
+    cfg, model, params, qp = small_lm
+    prompts = [[1, 2, 3], [5, 6], [9, 9, 9, 9]]
+    # greedy on the untrained model repeats tokens; use each prompt's own
+    # second greedy token as EOS so the stop fires mid-stream for some row
+    base = _mk(model, qp)
+    free = base.generate(prompts, max_new_tokens=6)
+    eos = free[0][1]
+    want = _mk(model, qp).generate(prompts, max_new_tokens=6, eos_id=eos)
+    eng = _mk(model, qp, spec=SpeculativeConfig(k=3), draft=(model, qp))
+    got = eng.generate(prompts, max_new_tokens=6, eos_id=eos)
+    assert got == want
+    for o in got:
+        assert len(o) == 6
+        if eos in o:
+            assert all(t == eos for t in o[o.index(eos):])
+
+
+def test_spec_int4_kv_pool_identical(small_lm, w3_draft):
+    """Verification through the int4 K-Means target pool: deterministic
+    assignment keeps speculative == non-speculative even with quantized KV."""
+    cfg, model, params, qp = small_lm
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [8, 8]]
+    want = _mk(model, qp, kv_quant=True, cache_len=32).generate(
+        prompts, max_new_tokens=6)
+    eng = _mk(model, qp, kv_quant=True, cache_len=32,
+              spec=SpeculativeConfig(k=2), draft=w3_draft)
+    assert eng.generate(prompts, max_new_tokens=6) == want
+
+
+def test_spec_preemption_deterministic(small_lm, w3_draft):
+    """A pool too small for all slots forces preemption while verify segments
+    grow blocks; draft state resets with the slot and outputs don't change."""
+    cfg, model, params, qp = small_lm
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [4, 5], [6, 9, 1], [7, 8, 9, 10]]
+    mk = lambda n_blocks: _mk(model, qp, cache_len=32, block_size=4,
+                              n_blocks=n_blocks, prefix_cache=False,
+                              spec=SpeculativeConfig(k=2), draft=w3_draft)
+    big, small = mk(0), mk(8)
+    a = big.generate(prompts, max_new_tokens=8)
+    b = small.generate(prompts, max_new_tokens=8)
+    assert small.scheduler.stats["preemptions"] > 0
+    assert big.scheduler.stats["preemptions"] == 0
+    assert a == b
+    assert a == _mk(model, qp, cache_len=32, block_size=4,
+                    prefix_cache=False).generate(prompts, max_new_tokens=8)
+
+
+def test_spec_rollback_frees_blocks_and_invariants(small_lm, w3_draft):
+    """Seeded random speculative traffic over a small pool with prefix
+    sharing: after every step each block is held by exactly ``refcount``
+    running requests and allocatable + live == pool — i.e. rollback's block
+    frees are exact (no leak, no double-free), including when verify
+    segments, COW, preemption, and prefix aliasing all interleave."""
+    cfg, model, params, qp = small_lm
+    eng = _mk(model, qp, cache_len=16, block_size=4, n_blocks=10,
+              token_budget=24, slots=3, spec=SpeculativeConfig(k=2),
+              draft=w3_draft)
+    sched, alloc = eng.scheduler, eng.scheduler.allocator
+    rng = np.random.RandomState(0)
+    prefix = [7, 7, 7, 7]
+    results: dict[int, list[int]] = {}
+    pending = 12
+    while pending or sched._running or sched._queue:
+        if pending and (rng.rand() < 0.5
+                        or not (sched._running or sched._queue)):
+            tail = [int(t) for t in rng.randint(1, 200, int(rng.randint(1, 6)))]
+            prompt = (list(prefix) if rng.rand() < 0.6 else []) + tail
+            sched.submit(prompt, int(rng.randint(1, 7)))
+            pending -= 1
+        if sched._running or sched._queue:
+            sched.step(results)
+        held = [b for r in sched._running for b in r.blocks]
+        for b in range(sched.pcfg.n_blocks):
+            assert alloc.refcount(b) == held.count(b), (
+                f"block {b}: {alloc.refcount(b)} refs, {held.count(b)} holders"
+            )
+        assert alloc.n_free + len(set(held)) == sched.pcfg.n_blocks
+    assert len(results) == 12
+    assert sched.stats["drafted_tokens"] > 0
+    assert alloc.n_free == sched.pcfg.n_blocks  # drained: nothing leaked
+
+
+def test_spec_draft_artifact_load_path(small_lm, tmp_path):
+    """The production path: the draft rides in via
+    ``speculative.draft_artifact`` and is loaded with load_quantized."""
+    from repro.core.artifact import save_quantized
+
+    cfg, model, params, qp = small_lm
+    d = tmp_path / "draft_w3"
+    save_quantized(d, cfg, DEFAULT_DRAFT_SPEC,
+                   quantize_model(model, params, DEFAULT_DRAFT_SPEC))
+    prompts = [[1, 2, 3, 4], [5, 6]]
+    want = _mk(model, qp).generate(prompts, max_new_tokens=5)
+    eng = _mk(model, qp,
+              spec=SpeculativeConfig(k=2, draft_artifact=str(d)))
+    assert eng.generate(prompts, max_new_tokens=5) == want
+    assert eng.stats["drafted_tokens"] > 0
+    # draft KV policy came from the artifact's spec (int4 draft pool)
+    assert "pages_k_idx" in (eng.scheduler.draft.pools
+                             if isinstance(eng.scheduler.draft.pools, dict)
+                             else eng.scheduler.draft.pools[0])
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_spec_temperature_greedy_only_gate(small_lm, w3_draft):
+    cfg, model, params, qp = small_lm
+    with pytest.raises(NotImplementedError, match="rejection-sampling"):
+        _mk(model, qp, spec=SpeculativeConfig(k=2), draft=w3_draft,
+            temperature=1.0)
+
+
+def test_spec_config_validation(small_lm, w3_draft):
+    cfg, model, params, qp = small_lm
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        SpeculativeConfig(k=0)
+    with pytest.raises(ValueError, match="draft"):
+        _mk(model, qp, spec=SpeculativeConfig(k=2))  # no draft, no artifact
+    with pytest.raises(ValueError, match="token_budget"):
+        # 2 rows of width 3 < 3 slots
+        _mk(model, qp, spec=SpeculativeConfig(k=2), draft=w3_draft,
+            token_budget=6, slots=3)
+
+
+# ---------------------------------------------------------------------------
+# segment-aware prefill packing (seg_width > 1, no speculation)
+# ---------------------------------------------------------------------------
+
+def test_seg_width_packing_matches_flat_layout(small_lm):
+    """Prefill rows grouped seg_width tokens per kernel segment (one
+    block-table gather per row) must be token-identical to the flat S=1
+    packed layout, and still mix prefill with decode in one step."""
+    cfg, model, params, qp = small_lm
+    prompts = [[(5 * i + j) % cfg.vocab_size or 1 for j in range(n)]
+               for i, n in enumerate([11, 3, 7, 14, 2])]
+    budgets = [4, 6, 3, 5, 7]
+    flat = _mk(model, qp, token_budget=12, seg_width=1)
+    want = flat.generate(prompts, max_new_tokens=budgets)
+    seg = _mk(model, qp, token_budget=12, seg_width=4)
+    got = seg.generate(prompts, max_new_tokens=budgets)
+    assert got == want
+    assert seg.scheduler.seg_width == 4 and seg.scheduler.rows == 3
+    assert seg.scheduler.stats["mixed_steps"] > 0
+    # same cell budget, 4x fewer rows: every packed step does 3 block-table
+    # gathers instead of 12 (the gather dedupe the segment layout buys)
+    assert seg.scheduler.token_budget == flat.scheduler.token_budget == 12
+    assert seg.scheduler.rows < flat.scheduler.rows
+
+
+def test_seg_width_prefix_sharing_identical(small_lm):
+    """seg_width > 1 composes with prefix sharing + COW (multi-token segment
+    writes into shared blocks trigger the same copy-on-write pass)."""
+    cfg, model, params, qp = small_lm
+    system = [3, 1, 4, 1, 5, 9, 2, 6]
+    prompts = [system + [40 + i] for i in range(3)] + [[80], [81, 82]]
+    # slots=2: the third sharer is admitted after the leader's blocks are
+    # registered, so the prefix cache actually gets hit
+    want = _mk(model, qp, prefix_cache=False, seg_width=3, slots=2).generate(
+        prompts, max_new_tokens=5)
+    assert _mk(model, qp, prefix_cache=True, seg_width=1, slots=2).generate(
+        prompts, max_new_tokens=5) == want
+    eng = _mk(model, qp, prefix_cache=True, seg_width=3, slots=2)
+    assert eng.generate(prompts, max_new_tokens=5) == want
+    assert eng.stats["prefix_hit_tokens"] > 0
