@@ -38,15 +38,28 @@ records tokens/s for both plus the acceptance rate and the
 drafted / accepted / rolled-back token counters, and on the full trace
 asserts speculative decode tokens/s beats the non-speculative baseline.
 
+**Telemetry** (this PR's instrument panel): the paged engine runs at
+``telemetry="trace"``, so TTFT / inter-token-latency / queue-wait / e2e
+percentiles are **engine-sourced** (serving/telemetry.py histograms, wall
+clock) rather than derived from the bench's hybrid sim clock — both are
+reported; they answer different questions (sim latency is arrival-aware,
+engine latency is compute-path truth). The run writes a Chrome/Perfetto
+trace artifact to ``results/serving_trace.json`` (validated as trace-event
+JSON here — the CI gate), and a final overhead phase serves one small trace
+with ``telemetry="off"`` vs the histograms-on default and records the
+wall-time delta.
+
 ``--smoke`` (or run(smoke=True)) shrinks all traces for CI; the smoke run
-still asserts ``prefix_hit_tokens > 0`` (the prefix-sharing CI gate) and
+still asserts ``prefix_hit_tokens > 0`` (the prefix-sharing CI gate),
 ``accepted_tokens > 0`` + speculative/baseline token-identity (the
-speculative gate).
+speculative gate), a non-empty engine TTFT histogram, and that the trace
+artifact parses (the telemetry gates).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import sys
 import tempfile
 import time
@@ -54,7 +67,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, record
+from benchmarks.common import RESULTS, emit, record
 from repro.configs.base import get_smoke_config
 from repro.core.artifact import load_quantized, save_quantized
 from repro.core.qlinear import QLinearConfig
@@ -190,13 +203,13 @@ def run(smoke: bool = False) -> None:
                          batch_slots=SLOTS)
     paged = ServingEngine(model, qparams,
                           ServeConfig.from_spec(spec, cache_len=cache_len,
-                                                block_size=16, prefill_chunk=64),
+                                                block_size=16, prefill_chunk=64,
+                                                telemetry="trace"),
                           batch_slots=SLOTS)
     # warm the jit caches so the comparison measures steady-state serving
     ring.generate([[1, 2, 3]] * SLOTS, max_new_tokens=2)
     paged.generate([[1, 2, 3]] * SLOTS, max_new_tokens=2)
-    for k in paged.scheduler.stats:
-        paged.scheduler.stats[k] = type(paged.scheduler.stats[k])()
+    paged.telemetry.reset()  # measurements start clean after warmup
 
     print("engine,tokens_s,p50_s,p95_s,extra")
     ring_tps, ring_lat = run_ring(ring, trace)
@@ -215,6 +228,22 @@ def run(smoke: bool = False) -> None:
           f"prefill_tokens={st['prefill_tokens']} "
           f"budget_util={st['packed_tokens'] / (steps * budget):.2f} "
           f"avg_decode_rows={st['decode_slot_tokens'] / steps:.2f}")
+
+    # ---- engine-sourced SLO latencies + Perfetto trace artifact -----------
+    snap = paged.telemetry.snapshot()
+    ttft, itl = snap["requests"]["ttft_s"], snap["requests"]["itl_s"]
+    assert ttft["count"] > 0, "engine TTFT histogram is empty (CI gate)"
+    assert itl["count"] > 0, "engine ITL histogram is empty"
+    print(f"engine_lat,-,-,-,"
+          f"ttft_p50={ttft['p50'] * 1e3:.1f}ms ttft_p95={ttft['p95'] * 1e3:.1f}ms "
+          f"itl_p50={itl['p50'] * 1e3:.1f}ms itl_p95={itl['p95'] * 1e3:.1f}ms "
+          f"(wall clock, n={ttft['count']} requests)")
+    trace_path = paged.telemetry.export_chrome_trace(RESULTS / "serving_trace.json")
+    tdata = json.loads(trace_path.read_text())  # the CI gate: trace parses
+    assert tdata.get("traceEvents"), "Perfetto trace has no events"
+    emit("serving_trace_artifact", 0.0,
+         f"{trace_path.name}: {len(tdata['traceEvents'])} trace events "
+         f"(open at ui.perfetto.dev)")
 
     # ---- shared-system-prompt phase: prefix sharing on vs off -------------
     block_size = 16
@@ -260,7 +289,9 @@ def run(smoke: bool = False) -> None:
 
     emit("serving_paged_vs_ring_tokens_s", 0.0,
          f"speedup={paged_tps / ring_tps:.2f}x (paged {paged_tps:.1f} vs ring {ring_tps:.1f} tok/s)")
-    emit("serving_paged_p95_latency_s", p95q * 1e6, f"ring_p95={p95:.2f}s")
+    # the value rides the generic us_per_call field but the name's unit wins:
+    # seconds (this used to multiply by 1e6, recording microseconds as _s)
+    emit("serving_paged_p95_latency_s", p95q, f"ring_p95={p95:.2f}s")
     emit("serving_mixed_step_share", 0.0,
          f"{st['mixed_steps']}/{st['packed_steps']} packed steps served prefill+decode together")
     bench_cfg = {"smoke": smoke, "n_requests": n_req, "slots": SLOTS,
@@ -277,6 +308,16 @@ def run(smoke: bool = False) -> None:
            peak_occupancy=round(st["peak_occupancy"], 3),
            budget_util=round(st["packed_tokens"] / (steps * budget), 3),
            config=bench_cfg)
+    record("serving_latency_engine",  # wall-clock, from the engine telemetry
+           ttft_p50_s=round(ttft["p50"], 4), ttft_p95_s=round(ttft["p95"], 4),
+           ttft_p99_s=round(ttft["p99"], 4),
+           itl_p50_s=round(itl["p50"], 5), itl_p95_s=round(itl["p95"], 5),
+           itl_p99_s=round(itl["p99"], 5),
+           e2e_p95_s=round(snap["requests"]["e2e_s"].get("p95", 0.0), 4),
+           queue_wait_p95_s=round(
+               snap["requests"]["queue_wait_s"].get("p95", 0.0), 4),
+           n_requests=ttft["count"], trace_events=len(tdata["traceEvents"]),
+           trace_file=trace_path.name, config=bench_cfg)
     record("serving_prefix",
            prefix_hit_tokens=st_on["prefix_hit_tokens"],
            prefill_skipped=st_on["prefill_skipped"],
@@ -303,7 +344,52 @@ def run(smoke: bool = False) -> None:
         # step (the PR-1 scheduler serialized every prefill chunk at batch=1)
         assert st["mixed_steps"] > 0, "no packed step mixed prefill with decode"
 
+    run_overhead_phase(model, qparams, spec, cache_len, smoke)
     run_speculative_phase(smoke)
+
+
+def run_overhead_phase(model, qparams, spec, cache_len: int, smoke: bool) -> None:
+    """telemetry="off" vs the histograms-on default on one small trace.
+
+    Telemetry never wraps traced code (identical jaxpr — asserted in
+    tests/test_telemetry.py), so any delta is pure host-side bookkeeping
+    (~10 us/step measured in isolation). A single cold pass per level is
+    dominated by whichever engine runs first paying the process-global
+    dispatch-cache warmup, so the trace is replayed interleaved and each
+    level keeps its best pass. Reported, not asserted: wall-time deltas on
+    a shared CI box sit inside scheduler-loop noise (the < 2% claim is
+    checked on the recorded numbers across runs)."""
+    cfg = get_smoke_config("llama3_2_1b")
+    trace = make_trace(cfg.vocab_size, seed=3, n_requests=4 if smoke else 12,
+                       prompt_range=(8, 64))
+    engines = {}
+    for level in ("metrics", "off"):
+        engines[level] = ServingEngine(
+            model, qparams,
+            ServeConfig.from_spec(spec, cache_len=cache_len, block_size=16,
+                                  prefill_chunk=64, telemetry=level),
+            batch_slots=SLOTS)
+        engines[level].generate([[1, 2, 3]] * SLOTS, max_new_tokens=2)  # jit
+    times = {"metrics": [], "off": []}
+    for _rep in range(3):
+        for level, eng in engines.items():
+            eng.telemetry.reset()
+            t0 = time.perf_counter()
+            for t in trace:
+                eng.scheduler.submit(t.prompt, t.budget)
+            eng.scheduler.run()
+            times[level].append(time.perf_counter() - t0)
+    assert engines["off"].stats["packed_steps"] == 0, \
+        "telemetry=off must read all-zero legacy stats"
+    times = {level: min(ts) for level, ts in times.items()}
+    overhead = (times["metrics"] - times["off"]) / times["off"]
+    print(f"tel_overhead,-,-,-,metrics={times['metrics']:.3f}s "
+          f"off={times['off']:.3f}s overhead={overhead * 100:+.1f}%")
+    record("serving_telemetry_overhead",
+           wall_s_metrics=round(times["metrics"], 4),
+           wall_s_off=round(times["off"], 4),
+           overhead_pct=round(overhead * 100, 2),
+           config={"smoke": smoke, "n_requests": len(trace), "slots": SLOTS})
 
 
 def run_speculative_phase(smoke: bool) -> None:
@@ -354,8 +440,7 @@ def run_speculative_phase(smoke: bool) -> None:
     base.generate(warm, max_new_tokens=2)
     specd.generate(warm, max_new_tokens=2)
     for eng in (base, specd):
-        for k in eng.scheduler.stats:
-            eng.scheduler.stats[k] = type(eng.scheduler.stats[k])()
+        eng.telemetry.reset()
     specd.scheduler.draft.steps = 0
 
     base_tps, _, base_out = run_paged(base, traces)
@@ -403,4 +488,12 @@ def run_speculative_phase(smoke: bool) -> None:
 
 
 if __name__ == "__main__":
+    # Standalone entry (CI smoke) writes the same BENCH json run.py would,
+    # so the records + trace pointer are uploadable as workflow artifacts.
+    from benchmarks import common
+    from benchmarks.run import _write_result
+
+    _t0 = time.time()
     run(smoke="--smoke" in sys.argv[1:])
+    _write_result("bench_serving", True, time.time() - _t0,
+                  list(common.RECORDS))

@@ -96,6 +96,18 @@ def main() -> None:
                   f"{st['prefill_tokens']} prefill tokens in {st['prefill_chunks']} segments, "
                   f"peak pool occupancy {st['peak_occupancy']:.0%}, "
                   f"{st['preemptions']} preemptions")
+            # every engine carries a telemetry snapshot: SLO histograms
+            # (TTFT / inter-token latency) measured at the engine, plus the
+            # packed-step host/device time split
+            snap = engine.snapshot()
+            ttft, itl = snap["requests"]["ttft_s"], snap["requests"]["itl_s"]
+            steps = snap["steps"]
+            print(f"   telemetry: TTFT p50 {ttft['p50'] * 1e3:.1f} ms / "
+                  f"p95 {ttft['p95'] * 1e3:.1f} ms, "
+                  f"ITL p50 {itl['p50'] * 1e3:.2f} ms over {itl['count']} tokens, "
+                  f"step split host {steps['host_s']['mean'] * 1e3:.1f} ms / "
+                  f"device {steps['device_s']['mean'] * 1e3:.1f} ms, "
+                  f"mean budget util {steps['util']['mean']:.0%}")
 
         if args.speculative:
             from repro.serving.speculative import (DEFAULT_DRAFT_SPEC,

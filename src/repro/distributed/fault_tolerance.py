@@ -4,7 +4,10 @@ Components (each unit-testable on one host):
 
 * :class:`StepMonitor` — running step-time stats + straggler detection
   (step > factor x running median). On a real cluster the detection feeds
-  either collective-timeout tuning or the elastic path below.
+  either collective-timeout tuning or the elastic path below. The windowed
+  stats themselves are :class:`repro.serving.telemetry.StreamingStats`
+  (re-exported here) — the one streaming-stats implementation in the repo,
+  shared with the serving telemetry's per-step timing records.
 * :func:`elastic_plan` — given surviving pod/host counts, produce the largest
   valid (pod, data, model) mesh that preserves TP degree (re-sharding TP
   requires weight reshuffling; dropping DP replicas does not), plus the batch
@@ -20,40 +23,49 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-import statistics
 import time
 
-__all__ = ["StepMonitor", "Heartbeat", "elastic_plan", "find_resumable_step"]
+from repro.serving.telemetry import StreamingStats
+
+__all__ = ["StepMonitor", "StreamingStats", "Heartbeat", "elastic_plan",
+           "find_resumable_step"]
 
 
 class StepMonitor:
-    """Streaming step-time stats; flags stragglers vs the running median."""
+    """Straggler detection (step > factor x running median) over a
+    :class:`StreamingStats` window — the same implementation telemetry's
+    per-step records use, not a parallel copy."""
 
     def __init__(self, window: int = 64, straggler_factor: float = 2.0):
-        self.window = window
+        self.stats = StreamingStats(window=window)
         self.factor = straggler_factor
-        self.times: list[float] = []
         self.straggler_count = 0
 
+    @property
+    def window(self) -> int:
+        return self.stats.window
+
+    @property
+    def times(self) -> list[float]:
+        return self.stats.times
+
     def record(self, dt: float) -> None:
-        self.times.append(dt)
-        if len(self.times) > self.window:
-            self.times.pop(0)
+        self.stats.record(dt)
         if self.is_straggler(dt):
             self.straggler_count += 1
 
     def median(self) -> float:
-        return statistics.median(self.times) if self.times else 0.0
+        return self.stats.median()
 
     def is_straggler(self, dt: float) -> bool:
-        return len(self.times) >= 8 and dt > self.factor * self.median()
+        return len(self.stats) >= 8 and dt > self.factor * self.median()
 
     def summary(self) -> dict:
-        if not self.times:
+        if not len(self.stats):
             return {}
         return {
             "median_s": self.median(),
-            "p95_s": sorted(self.times)[int(0.95 * (len(self.times) - 1))],
+            "p95_s": self.stats.percentile(95),
             "stragglers": self.straggler_count,
         }
 

@@ -465,30 +465,35 @@ def _paged_attend(cache: dict, q, q_pos, softcap):
 
     bt, cl = cache["block_tables"], cache["ctx_lens"]
     quantized = "pages_k_idx" in cache
-    if _paged_kernel_enabled():
-        from repro.kernels.ops import should_interpret
-        from repro.kernels.paged_attn import paged_attn_kernel_call
+    # named unconditionally (telemetry-independent) so XLA profiles line up
+    # with the serving timeline names in every mode — and the jaxpr is the
+    # same whether telemetry is on or off
+    with jax.named_scope("paged_attention"):
+        if _paged_kernel_enabled():
+            from repro.kernels.ops import should_interpret
+            from repro.kernels.paged_attn import paged_attn_kernel_call
 
+            if quantized:
+                args = (cache["pages_k_idx"], cache["pages_k_scale"],
+                        cache["pages_v_idx"], cache["pages_v_scale"],
+                        cache["kv_codebook"])
+            else:
+                args = (cache["pages_k"], cache["pages_v"])
+            o = paged_attn_kernel_call(
+                q, *args, block_tables=bt, ctx_lens=cl, q_pos=q_pos,
+                softcap=softcap, interpret=should_interpret(),
+            )
+            return o.astype(q.dtype)
         if quantized:
-            args = (cache["pages_k_idx"], cache["pages_k_scale"],
-                    cache["pages_v_idx"], cache["pages_v_scale"],
-                    cache["kv_codebook"])
-        else:
-            args = (cache["pages_k"], cache["pages_v"])
-        o = paged_attn_kernel_call(
-            q, *args, block_tables=bt, ctx_lens=cl, q_pos=q_pos,
-            softcap=softcap, interpret=should_interpret(),
-        )
-        return o.astype(q.dtype)
-    if quantized:
-        return kref.paged_attn_quant_ref(
-            q, cache["pages_k_idx"], cache["pages_k_scale"],
-            cache["pages_v_idx"], cache["pages_v_scale"], cache["kv_codebook"],
-            bt, cl, q_pos, softcap=softcap,
+            return kref.paged_attn_quant_ref(
+                q, cache["pages_k_idx"], cache["pages_k_scale"],
+                cache["pages_v_idx"], cache["pages_v_scale"],
+                cache["kv_codebook"], bt, cl, q_pos, softcap=softcap,
+            ).astype(q.dtype)
+        return kref.paged_attn_ref(
+            q, cache["pages_k"], cache["pages_v"], bt, cl, q_pos,
+            softcap=softcap,
         ).astype(q.dtype)
-    return kref.paged_attn_ref(
-        q, cache["pages_k"], cache["pages_v"], bt, cl, q_pos, softcap=softcap
-    ).astype(q.dtype)
 
 
 def attention_apply(

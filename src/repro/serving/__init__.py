@@ -1,8 +1,8 @@
 """Serving subsystem: paged K-Means KV cache + continuous-batching scheduler
-with prefix sharing and speculative decoding.
+with prefix sharing, speculative decoding, and first-class telemetry.
 
 See serving/README.md for the block layout, scheduler states, int4 format,
-and the draft-propose / target-verify loop.
+the draft-propose / target-verify loop, and the observability metric names.
 """
 
 from repro.serving.engine import ServeConfig, ServingEngine, make_prefill_step, make_serve_step
@@ -13,6 +13,19 @@ from repro.serving.speculative import (
     DraftRunner,
     SpeculativeConfig,
     greedy_verify,
+)
+from repro.serving.telemetry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullTelemetry,
+    StreamingStats,
+    Telemetry,
+    TelemetryConfig,
+    linear_buckets,
+    log_buckets,
+    make_telemetry,
 )
 
 __all__ = [
@@ -29,4 +42,15 @@ __all__ = [
     "DraftRunner",
     "greedy_verify",
     "DEFAULT_DRAFT_SPEC",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "StreamingStats",
+    "Telemetry",
+    "TelemetryConfig",
+    "NullTelemetry",
+    "make_telemetry",
+    "log_buckets",
+    "linear_buckets",
 ]

@@ -71,6 +71,11 @@ class ServeConfig:
     # Token-identical to non-speculative greedy; greedy-only (temperature
     # configs raise until the rejection-sampling hook is implemented).
     speculative: SpeculativeConfig | None = None
+    # telemetry (serving/telemetry.py): "metrics" (default — counters, gauges,
+    # SLO histograms, step ring), "trace" (adds per-request timelines + spans
+    # for the Perfetto export), "off" (null object: zero per-token work and an
+    # untouched packed-step jaxpr), or a TelemetryConfig for fence/ring knobs
+    telemetry: object = "metrics"
 
     @classmethod
     def from_spec(cls, spec: QuantSpec, **kw) -> "ServeConfig":
@@ -155,8 +160,11 @@ class ServingEngine:
         :class:`~repro.core.artifact.QuantizedArtifact` tuple. When omitted,
         ``sc.speculative.draft_artifact`` is loaded from disk (the
         production path: quantize the draft once, serve it everywhere)."""
+        from repro.serving.telemetry import make_telemetry
+
         self.model, self.sc, self.slots = model, sc, batch_slots
         self.params = params
+        self.telemetry = make_telemetry(sc.telemetry)
         self.paged = sc.paged and model.supports_paged_cache()
         if self.paged:
             from repro.serving.scheduler import Scheduler
@@ -172,7 +180,7 @@ class ServingEngine:
 
                 draft = load_draft(sc.speculative.draft_artifact)
             self.scheduler = Scheduler(model, params, sc, slots=batch_slots,
-                                       draft=draft)
+                                       draft=draft, telemetry=self.telemetry)
         else:
             if sc.speculative is not None:
                 raise ValueError(
@@ -182,6 +190,10 @@ class ServingEngine:
             self.scheduler = None
             self._prefill = jax.jit(make_prefill_step(model, sc))
             self._step = jax.jit(make_serve_step(model, sc))
+            # fallback counters through the same registry as the paged path
+            tel = self.telemetry
+            self._fc = {k: tel.counter(f"serving_fallback_{k}") for k in (
+                "prefills", "steps", "tokens", "prompt_tokens", "pad_tokens")}
 
     @property
     def stats(self) -> dict:
@@ -189,10 +201,13 @@ class ServingEngine:
         preemption accounting plus prefix-cache hits, tokens of prefill
         skipped, copy-on-write copies, and cached-prefix evictions; under a
         speculative config also the draft forwards run and the acceptance
-        rate — accepted / drafted tokens). The fixed-slot fallback keeps no
-        counters (empty dict)."""
+        rate — accepted / drafted tokens). The fixed-slot fallback reports
+        its own batch counters (prefills, decode steps, tokens served, and
+        the pad-row fraction of prefill cells) from the same registry."""
         if self.scheduler is None:
-            return {}
+            d = {k: c.value for k, c in self._fc.items()}
+            d["pad_fraction"] = d["pad_tokens"] / max(1, d["prompt_tokens"])
+            return d
         d = dict(self.scheduler.stats,
                  prefix_evictions=self.scheduler.allocator.evictions,
                  prefix_blocks_cached=self.scheduler.allocator.n_cached)
@@ -201,6 +216,15 @@ class ServingEngine:
             d["acceptance_rate"] = (d["accepted_tokens"]
                                     / max(1, d["drafted_tokens"]))
         return d
+
+    def snapshot(self) -> dict:
+        """JSON-able dump of every telemetry metric (see Telemetry.snapshot)."""
+        return self.telemetry.snapshot()
+
+    def export_chrome_trace(self, path):
+        """Write a Chrome/Perfetto trace-event JSON file; open at
+        ui.perfetto.dev. Richest under ``telemetry="trace"``."""
+        return self.telemetry.export_chrome_trace(path)
 
     def generate(
         self, prompts: list[list[int]], max_new_tokens: int | list[int] = 32,
@@ -243,8 +267,12 @@ class ServingEngine:
         # attended as real context, skewing short prompts in mixed batches)
         pads = jnp.array([plen - len(p) for p in prompts], jnp.int32)
         caches = _attach_pad_lens(caches, pads)
-        tok, caches, logits = self._prefill(self.params, caches, {"tokens": toks,
-            **self._img(b)})
+        self._fc["prefills"].add()
+        self._fc["prompt_tokens"].add(b * plen)
+        self._fc["pad_tokens"].add(sum(plen - len(p) for p in prompts))
+        with self.telemetry.annotate("fallback_prefill"):
+            tok, caches, logits = self._prefill(self.params, caches,
+                                                {"tokens": toks, **self._img(b)})
         key = jax.random.PRNGKey(seed)
         done = jnp.zeros((b,), bool)
         if self.sc.temperature > 0:
@@ -255,8 +283,10 @@ class ServingEngine:
         outs = [tok]
         pos = plen
         for _ in range(max_new_tokens - 1):
-            tok, caches, logits = self._step(self.params, caches, tok[:, None],
-                                             jnp.int32(pos))
+            with self.telemetry.annotate("fallback_step"):
+                tok, caches, logits = self._step(self.params, caches,
+                                                 tok[:, None], jnp.int32(pos))
+            self._fc["steps"].add()
             if self.sc.temperature > 0:
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(
@@ -270,6 +300,7 @@ class ServingEngine:
             if eos_id is not None and bool(done.all()):
                 break
         gen = jnp.stack(outs, axis=1)
+        self._fc["tokens"].add(b * len(outs))
         rows = [list(map(int, row)) for row in gen]
         pad = eos_id if eos_id is not None else 0
         return [row + [pad] * (max_new_tokens - len(row)) for row in rows]

@@ -101,15 +101,35 @@ class BlockAllocator:
     refuse traffic it can serve.
     """
 
-    def __init__(self, n_blocks: int, prefix_cache: bool = False):
+    def __init__(self, n_blocks: int, prefix_cache: bool = False,
+                 telemetry=None):
         self.n_blocks = n_blocks
         self.prefix_cache = prefix_cache
         self.evictions = 0  # cached prefix blocks reclaimed under pressure
+        self.blocks_allocated = 0  # running total, blocks handed out by alloc
+        self.blocks_freed = 0  # running total, refs recycled to free/cached
         self._free = list(range(n_blocks - 1, -1, -1))
         self._ref = [0] * n_blocks
         self._hash_to_block: dict[bytes, int] = {}
         self._block_hash: dict[int, bytes] = {}
         self._lru: OrderedDict[int, None] = OrderedDict()  # oldest first
+        if telemetry is not None and telemetry.enabled:
+            # allocator state gauges read lazily at snapshot time; eviction
+            # causes split into pressure (alloc ran dry) vs never (register
+            # collisions stay private and free normally, so only pressure
+            # evictions exist today — the counter names the cause explicitly)
+            telemetry.gauge("serving_blocks_free", "truly-free blocks",
+                            fn=lambda: len(self._free))
+            telemetry.gauge("serving_blocks_cached", "cached prefix blocks (LRU)",
+                            fn=lambda: len(self._lru))
+            telemetry.gauge("serving_blocks_live",
+                            "blocks held live (refcount >= 1)",
+                            fn=lambda: self.n_blocks - self.n_free)
+            self._c_evict = telemetry.counter(
+                "serving_block_evictions_pressure",
+                "cached prefix blocks reclaimed because alloc ran dry")
+        else:
+            self._c_evict = None
 
     @property
     def n_free(self) -> int:
@@ -142,6 +162,7 @@ class BlockAllocator:
         del self._free[len(self._free) - n:]
         for b in got:
             self._ref[b] = 1
+        self.blocks_allocated += n
         return got
 
     def free(self, ids: list[int]) -> None:
@@ -166,6 +187,7 @@ class BlockAllocator:
         for b in ids:
             self._ref[b] -= 1
             if self._ref[b] == 0:
+                self.blocks_freed += 1
                 if b in self._block_hash:  # registered prefix: park, matchable
                     self._lru[b] = None
                     self._lru.move_to_end(b)
@@ -215,6 +237,8 @@ class BlockAllocator:
         del self._hash_to_block[self._block_hash.pop(bid)]
         self._free.append(bid)
         self.evictions += 1
+        if self._c_evict is not None:
+            self._c_evict.add()
 
 
 def copy_blocks(pools, src: jax.Array, dst: jax.Array):

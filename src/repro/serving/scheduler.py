@@ -91,6 +91,7 @@ from repro.serving.speculative import (
     make_packed_fn,
     rejection_sample,
 )
+from repro.serving.telemetry import linear_buckets, log_buckets, make_telemetry
 
 __all__ = ["RequestState", "Request", "Scheduler"]
 
@@ -156,10 +157,13 @@ class Scheduler:
     ``(model, params, spec)`` — e.g. a ``load_quantized`` artifact tuple.
     """
 
-    def __init__(self, model, params, sc, slots: int = 8, draft=None):
+    def __init__(self, model, params, sc, slots: int = 8, draft=None,
+                 telemetry=None):
         if not model.supports_paged_cache():
             raise ValueError(f"family {model.cfg.family} cannot use the paged scheduler")
         self.model, self.params, self.sc, self.slots = model, params, sc, slots
+        self.telemetry = telemetry if telemetry is not None \
+            else make_telemetry(getattr(sc, "telemetry", "metrics"))
         self.spec = sc.speculative
         self.draft: DraftRunner | None = None
         if self.spec is not None:
@@ -183,6 +187,7 @@ class Scheduler:
                 cache_dtype=jnp.dtype(dspec.kv_dtype if dspec else sc.cache_dtype),
                 kv_quant=(dspec.kv_bits is not None) if dspec else sc.kv_quant,
                 token_budget=self.spec.draft_token_budget,
+                telemetry=self.telemetry,
             )
         # grid geometry: rows x seg_width cells. Decode reservation needs
         # every slot's verify segment (k+1 tokens under speculation, 1
@@ -214,7 +219,8 @@ class Scheduler:
             slots, sc.cache_len, jnp.dtype(sc.cache_dtype), quantized=sc.kv_quant,
             layout="paged", block_size=sc.block_size, n_blocks=n_blocks,
         )
-        self.allocator = BlockAllocator(n_blocks, prefix_cache=sc.prefix_cache)
+        self.allocator = BlockAllocator(n_blocks, prefix_cache=sc.prefix_cache,
+                                        telemetry=self.telemetry)
         # chain-hash root: blocks are only shareable within one (layer-set,
         # quant-policy, geometry) identity — a pool restarted with a different
         # KV treatment can never alias stale hashes
@@ -228,15 +234,43 @@ class Scheduler:
         self._running: list[Request] = []
         self._slot_free = list(range(slots - 1, -1, -1))
         self._next_rid = 0
-        self.stats = {"packed_steps": 0, "decode_steps": 0, "prefill_chunks": 0,
-                      "mixed_steps": 0, "preemptions": 0, "peak_occupancy": 0.0,
-                      "decode_slot_tokens": 0, "prefill_tokens": 0,
-                      "packed_tokens": 0, "prefix_hits": 0,
-                      "prefix_hit_tokens": 0, "prefill_skipped": 0,
-                      "cow_copies": 0, "spec_rounds": 0, "drafted_tokens": 0,
-                      "accepted_tokens": 0, "rolled_back_tokens": 0}
+        # serving counters live in the telemetry registry (Scheduler.stats
+        # rebuilds the legacy dict from them); cached as attributes so the
+        # hot loop pays one method call, and all of them no-op at level=off
+        tel = self.telemetry
+        self._c = {k: tel.counter(f"serving_{k}") for k in (
+            "packed_steps", "decode_steps", "prefill_chunks", "mixed_steps",
+            "decode_slot_tokens", "prefill_tokens", "packed_tokens",
+            "prefix_hits", "prefix_hit_tokens", "prefill_skipped",
+            "cow_copies", "spec_rounds", "drafted_tokens", "accepted_tokens",
+            "rolled_back_tokens")}
+        self._c["preemptions"] = tel.counter("serving_preemptions")
+        self._g_peak = tel.gauge("serving_pool_occupancy_peak",
+                                 "high-water live-block fraction")
+        tel.gauge("serving_queue_depth", fn=lambda: len(self._queue))
+        tel.gauge("serving_running_requests", fn=lambda: len(self._running))
+        self._h_accept = tel.histogram(
+            "serving_spec_accepted_per_round",
+            linear_buckets(0.0, float(self.spec.k + 1) if self.spec else 1.0,
+                           (self.spec.k + 1) if self.spec else 1),
+            "accepted draft tokens per verify round")
+        self._h_draft_round = tel.histogram(
+            "serving_draft_round_s", log_buckets(1e-6, 1e2),
+            "draft propose (catch-up + scan) per round, seconds")
+        self._c_draft_time = tel.counter(
+            "serving_draft_time_s", "total seconds in draft proposal")
+        self._c_target_time = tel.counter(
+            "serving_target_time_s", "total seconds in target packed steps")
         self._packed_fn = jax.jit(make_packed_fn(model))
         self._copy_fn = jax.jit(copy_blocks)
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter dict, rebuilt from the telemetry registry (all
+        zeros under ``telemetry="off"``). Read-only: mutate via telemetry."""
+        d = {k: c.value for k, c in self._c.items()}
+        d["peak_occupancy"] = self._g_peak.value
+        return d
 
     # ----------------------------------------------------------------- host
     def submit(self, prompt: list[int], max_new_tokens: int,
@@ -259,6 +293,7 @@ class Scheduler:
                     key=jax.random.PRNGKey(seed * 100_003 + (rid if salt is None else salt)),
                     context=list(prompt))
         self._queue.append(r)
+        self.telemetry.request_submitted(rid, len(prompt))
         return rid
 
     def run(self) -> dict[int, list[int]]:
@@ -324,13 +359,14 @@ class Scheduler:
             if self.draft is not None:
                 self.draft.reset(r.slot)
             if shared:
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_hit_tokens"] += len(shared) * bs
-                self.stats["prefill_skipped"] += r.prefilled
+                self._c["prefix_hits"].add()
+                self._c["prefix_hit_tokens"].add(len(shared) * bs)
+                self._c["prefill_skipped"].add(r.prefilled)
+            self.telemetry.request_admitted(r.rid,
+                                            prefix_hit_tokens=len(shared) * bs)
             self._running.append(r)
             admitted += 1
-        self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
-                                           self.allocator.occupancy)
+        self._g_peak.set_max(self.allocator.occupancy)
         return admitted
 
     def _match_prefix(self, r: Request) -> tuple[list[int], list[bytes]]:
@@ -374,6 +410,11 @@ class Scheduler:
         the rows that fit; large prompts span several steps).
         """
         S = self.seg_width
+        tel = self.telemetry
+        t_host0 = tel.now()
+        blocks_alloc0 = self.allocator.blocks_allocated
+        blocks_freed0 = self.allocator.blocks_freed
+        cow0 = self._c["cow_copies"].value
         while True:
             # decode reservation: guarantee blocks for every incoming token
             # (may preempt — victims leave self._running, incl. prefilling)
@@ -399,10 +440,15 @@ class Scheduler:
         # done, so no proposal is wasted on an evicted request); the draft
         # pool is private, so proposing cannot invalidate the plan
         drafts: dict[int, list[int]] = {}
+        draft_dt = 0.0
         if self.draft is not None and decoders:
+            t_d0 = tel.now()
             drafts = self.draft.propose(
                 [(r.rid, r.slot, r.context, r.next_token, self._k_for(r))
                  for r in decoders])
+            draft_dt = tel.now() - t_d0
+            self._h_draft_round.observe(draft_dt)
+            self._c_draft_time.add(draft_dt)
 
         max_blk = self.pcfg.max_blocks_per_seq
         bt = np.full((self.slots, max_blk), -1, np.int32)
@@ -441,20 +487,27 @@ class Scheduler:
             n_prefill += n
         ctx = pos.max(axis=1) + 1  # per-row horizon (all-pad rows stay 0)
 
-        self.pools, logits = self._packed_fn(
-            self.params, self.pools, jnp.asarray(bt), jnp.asarray(slot_ids),
-            jnp.asarray(pos), jnp.asarray(ctx), jnp.asarray(tok),
-        )
+        t_dispatch = tel.now()
+        with tel.annotate("packed_step"):
+            self.pools, logits = self._packed_fn(
+                self.params, self.pools, jnp.asarray(bt), jnp.asarray(slot_ids),
+                jnp.asarray(pos), jnp.asarray(ctx), jnp.asarray(tok),
+            )
+            if tel.fence:  # exact host/device split on async backends
+                jax.block_until_ready(logits)
+        t_done = tel.now()
+        self._c_target_time.add(t_done - t_dispatch)
 
-        st = self.stats
-        st["packed_steps"] += 1
-        st["packed_tokens"] += int((pos >= 0).sum())
-        st["prefill_tokens"] += n_prefill
-        st["prefill_chunks"] += len(segments)
+        st = self._c
+        n_cells = int((pos >= 0).sum())
+        st["packed_steps"].add()
+        st["packed_tokens"].add(n_cells)
+        st["prefill_tokens"].add(n_prefill)
+        st["prefill_chunks"].add(len(segments))
         if decoders:
-            st["decode_steps"] += 1
+            st["decode_steps"].add()
         if decoders and segments:
-            st["mixed_steps"] += 1
+            st["mixed_steps"].add()
 
         if self.spec is not None and decoders:
             # one device->host transfer of every verify argmax
@@ -467,7 +520,8 @@ class Scheduler:
                 rw, cc = cells[0]
                 r.next_token = self._sample(logits[rw, cc], r)
                 r.generated.append(r.next_token)
-                st["decode_slot_tokens"] += 1
+                st["decode_slot_tokens"].add()
+                tel.tokens_committed(r.rid, 1)
                 continue
             d = drafts.get(r.rid, [])
             committed = greedy_verify([int(am[rr, cc]) for rr, cc in cells], d,
@@ -485,15 +539,20 @@ class Scheduler:
             n_acc = len(committed) - 1
             if n_acc < len(d) and committed[-1] == d[n_acc]:
                 n_acc += 1
-            st["spec_rounds"] += 1
-            st["drafted_tokens"] += len(d)
-            st["accepted_tokens"] += n_acc
-            st["rolled_back_tokens"] += len(d) - n_acc
-            st["decode_slot_tokens"] += len(committed)
+            st["spec_rounds"].add()
+            st["drafted_tokens"].add(len(d))
+            st["accepted_tokens"].add(n_acc)
+            st["rolled_back_tokens"].add(len(d) - n_acc)
+            st["decode_slot_tokens"].add(len(committed))
+            self._h_accept.observe(n_acc)
+            tel.tokens_committed(r.rid, len(committed))
+            tel.request_event(r.rid, "verify_round", drafted=len(d),
+                              accepted=n_acc, committed=len(committed))
             self._rollback(r)
             self.draft.sync(r.slot, len(r.context))
         for r, start, n in segments:
             r.prefilled = start + n
+            tel.request_event(r.rid, "prefill_chunk", start=start, n=n)
             if r.decoding and r.next_token is None:
                 # the prompt's real last token was in this step: its logits
                 # cell is the first sampled token (a re-admitted preemption
@@ -501,10 +560,24 @@ class Scheduler:
                 rw, col = last_cell[r.rid]
                 r.next_token = self._sample(logits[rw, col], r)
                 r.generated.append(r.next_token)
+                tel.first_token(r.rid)
         for r in self._running:
             self._register_full_blocks(r)  # publish before anyone finishes
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
+        if tel.enabled:
+            dec_rows = len(decoders) * self._dec_rows
+            tel.step_record(
+                host_s=(t_dispatch - t_host0 - draft_dt) + (tel.now() - t_done),
+                device_s=t_done - t_dispatch,
+                cells=n_cells, budget=self.token_budget,
+                decode_rows=0 if self.spec else dec_rows,
+                verify_rows=dec_rows if self.spec else 0,
+                prefill_rows=sum(-(-n // S) for _, _, n in segments),
+                blocks_allocated=self.allocator.blocks_allocated - blocks_alloc0,
+                blocks_freed=self.allocator.blocks_freed - blocks_freed0,
+                blocks_copied=self._c["cow_copies"].value - cow0,
+            )
 
     def _rollback(self, r: Request) -> None:
         """Free the blocks a verify segment grew that now hold only rejected
@@ -555,7 +628,7 @@ class Scheduler:
         # scatter into the same destination (scatter order is unspecified)
         copies = [(r, s, d) for r, s, d in copies
                   if r.state is RequestState.RUNNING]
-        self.stats["cow_copies"] += len(copies)
+        self._c["cow_copies"].add(len(copies))
         if copies:
             # pad (src, dst) to a power-of-two bucket by REPEATING the first
             # pair (duplicate scatters of the same value are idempotent, and
@@ -590,8 +663,7 @@ class Scheduler:
         while True:
             got = self.allocator.alloc(1)
             if got is not None:
-                self.stats["peak_occupancy"] = max(self.stats["peak_occupancy"],
-                                                   self.allocator.occupancy)
+                self._g_peak.set_max(self.allocator.occupancy)
                 return got[0], preempted
             victims = [v for v in self._running if v is not r]
             if not victims:
@@ -631,7 +703,8 @@ class Scheduler:
         r.state = RequestState.PREEMPTED
         self._running.remove(r)
         self._queue.appendleft(r)  # front: preserves FCFS completion order
-        self.stats["preemptions"] += 1
+        self._c["preemptions"].add()
+        self.telemetry.request_preempted(r.rid)
 
     def _finish(self, r: Request, results: dict) -> None:
         self.allocator.free(list(reversed(r.blocks)))
@@ -641,6 +714,7 @@ class Scheduler:
         r.state = RequestState.FINISHED
         self._running.remove(r)
         results[r.rid] = r.output()
+        self.telemetry.request_finished(r.rid, n_generated=len(r.generated))
 
     # ----------------------------------------------------------------- misc
     def _bt_row(self, r: Request) -> np.ndarray:

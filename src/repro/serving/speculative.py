@@ -197,7 +197,8 @@ class DraftRunner:
 
     def __init__(self, model, params, *, slots: int, cache_len: int, k: int,
                  block_size: int = 16, cache_dtype=jnp.float32,
-                 kv_quant: bool = False, token_budget: int = 0):
+                 kv_quant: bool = False, token_budget: int = 0,
+                 telemetry=None):
         if not model.supports_paged_cache():
             raise ValueError(
                 f"draft family {model.cfg.family} cannot back a paged draft pool"
@@ -230,6 +231,11 @@ class DraftRunner:
         self._catch_fn = jax.jit(make_packed_fn(model))
         self._draft_fn = jax.jit(self._make_draft_loop())
         self.steps = 0  # draft device dispatches (engine stats)
+        from repro.serving.telemetry import NULL_TELEMETRY
+
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        self._c_steps = self.telemetry.counter(
+            "serving_draft_steps", "draft device dispatches (catch-up + scan)")
 
     def _make_draft_loop(self):
         """One dispatch = k+1 scanned single-token forwards over all slots.
@@ -320,11 +326,14 @@ class DraftRunner:
                 if n < len(toks):
                     leftover.append([slot, toks[n:], start + n])
                 row += n
-            self.pools, _ = self._catch_fn(
-                self.params, self.pools, self._bt, jnp.asarray(slot_ids),
-                jnp.asarray(pos), jnp.asarray(pos[:, 0] + 1), jnp.asarray(tok),
-            )
+            with self.telemetry.annotate("draft_catchup"):
+                self.pools, _ = self._catch_fn(
+                    self.params, self.pools, self._bt, jnp.asarray(slot_ids),
+                    jnp.asarray(pos), jnp.asarray(pos[:, 0] + 1),
+                    jnp.asarray(tok),
+                )
             self.steps += 1
+            self._c_steps.add()
             pending = leftover
 
         # one scanned dispatch: k+1 fused AR steps across all decoding rows
@@ -333,11 +342,13 @@ class DraftRunner:
         pos0 = np.full((self.slots,), -1, np.int32)
         for row, (_rid, slot, context, next_token, _k) in enumerate(reqs):
             slot_ids[row], tok0[row], pos0[row] = slot, next_token, len(context)
-        self.pools, dr = self._draft_fn(
-            self.params, self.pools, self._bt, jnp.asarray(slot_ids),
-            jnp.asarray(tok0), jnp.asarray(pos0),
-        )
+        with self.telemetry.annotate("draft_scan"):
+            self.pools, dr = self._draft_fn(
+                self.params, self.pools, self._bt, jnp.asarray(slot_ids),
+                jnp.asarray(tok0), jnp.asarray(pos0),
+            )
         self.steps += 1
+        self._c_steps.add()
         dr = np.asarray(dr)  # (k+1, slots)
         drafts: dict[int, list[int]] = {}
         for row, (rid, slot, context, _nt, k_r) in enumerate(reqs):
