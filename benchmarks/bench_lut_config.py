@@ -1,25 +1,66 @@
 """Paper Table I + Fig. 16: LUT sizes and reduction FLOPs, ours vs WOQ LUT-GEMM.
 
-Analytic reproduction with the paper's formulas (Table I):
+Two phases:
+
+**Analytic** — the paper's formulas (Table I):
   WOQ inner-product LUT : size 2^mu * K/mu entries, reduction K/mu * n_W FLOPs/output
   Ours (Cartesian)      : size 2^(nA+nW) entries (K-independent),
                           reduction 2^(nA+nW) FLOPs/output
 Checked claims (K=N=4096, W4A4): 64x LUT reduction, 1024x group size,
 16x reduction-FLOPs — asserted, not just printed.
+
+**Measured** — the index-based GEMM implementations on real arrays, per tier
+(W4A4 / W3A4 / W8A4) at decode- and prefill-shaped M:
+
+  kernel  : Pallas index-GEMM on pre-quantized indices (ops.lut_gemm)
+  jnp     : the factorized jnp form (core.lut_gemm — what ``kernel=jnp`` runs)
+  fused   : ONE Pallas dispatch, bucketize-in-VMEM + index-GEMM
+            (ops.lut_gemm_fused — the serving hot path)
+  unfused : the same work as two dispatches — bucketize kernel writes idx to
+            HBM, index-GEMM kernel reads it back (what the fused kernel
+            replaces)
+
+Every variant is asserted against the counting-form oracle
+(``lut_gemm_counting``) before it is timed, and the fused path must beat the
+unfused two-dispatch pipeline at the decode shape (the PR's perf gate —
+holds in interpret mode on CPU and on real TPUs, where the win is the
+eliminated idx HBM roundtrip). The block autotune sweep runs on the decode
+shape and its winning blocks are recorded.
+
+Off-TPU these run the kernels in interpret mode, so absolute numbers are
+NOT TPU-representative (the jnp row in particular wins on CPU); relative
+fused-vs-unfused structure is what's asserted.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit
-from repro.core.lut_gemm import reduction_flops_counting, waq_lut_size, woq_lut_size
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, record, timed
+from repro.core.lut_gemm import (
+    lut_gemm as lut_gemm_jnp,
+    lut_gemm_counting,
+    reduction_flops_counting,
+    waq_lut_size,
+    woq_lut_size,
+)
 
 # q_proj GEMM dims per LLaMA size (Fig. 16): K = d_model
 LLAMA_DIMS = {"7B": 4096, "13B": 5120, "30B": 6656, "65B/70B": 8192}
 MU = 4  # WOQ group size (FIGLUT / LUT Tensor Core setting)
 N_W = N_A = 4
 
+# measured phase: one attention-ish GEMM, small enough for interpret mode
+MEAS_K, MEAS_N = 256, 128
+TIERS = {"w4a4": (4, 4), "w3a4": (3, 4), "w8a4": (8, 4)}
+SHAPES = {"decode": 8, "prefill": 128}
 
-def run() -> None:
+
+def run_analytic() -> None:
     print("# Table I / Fig 16 — LUT size (bytes) and reduction FLOPs per output column")
     print("model,K,woq_lut_B,ours_lut_B,lut_ratio,woq_red_flops,ours_red_flops,flops_ratio")
     for name, k in LLAMA_DIMS.items():
@@ -48,5 +89,89 @@ def run() -> None:
          f"woq={growth_woq:.1f}x ours={growth_ours:.1f}x (K-independent LUT)")
 
 
+def _unfused_pipeline(x, book, qw):
+    """Bucketize kernel -> idx in HBM -> index-GEMM kernel: the two-dispatch
+    pipeline the fused kernel replaces (scale handling identical)."""
+    from repro.core.quantize import QuantizedActivation, token_scale
+    from repro.kernels import ops
+
+    s = token_scale(x, "rms")
+    idx = ops.bucketize((x / s).astype(jnp.float32), book)
+    qa = QuantizedActivation(idx=idx, scale=s, codebook=book,
+                             nbits=int(book.shape[0]).bit_length() - 1)
+    return ops.lut_gemm(qa, qw)
+
+
+def run_measured() -> None:
+    from repro.core.quantize import quantize_activation, quantize_weight
+    from repro.core.quantize import fit_activation_codebook
+    from repro.kernels import ops
+
+    interp = jax.default_backend() != "tpu"
+    print(f"\n# measured index-GEMM, K={MEAS_K} N={MEAS_N}"
+          f" (interpret={interp}; absolute us not TPU-representative off-TPU)")
+    print("tier,shape,kernel_us,jnp_us,fused_us,unfused_us,fused_speedup")
+    calib = jax.random.normal(jax.random.PRNGKey(2), (64, MEAS_K))
+    for tier, (wb, ab) in TIERS.items():
+        qw = quantize_weight(jax.random.normal(jax.random.PRNGKey(1), (MEAS_K, MEAS_N)), wb)
+        book = fit_activation_codebook(calib, ab)
+        for shape, m in SHAPES.items():
+            x = jax.random.normal(jax.random.PRNGKey(m), (m, MEAS_K))
+            qa = quantize_activation(x, book)
+            # exactness first: every timed variant vs the counting oracle
+            oracle = lut_gemm_counting(qa, qw)
+            np.testing.assert_allclose(ops.lut_gemm(qa, qw), oracle, rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(jax.jit(lut_gemm_jnp)(qa, qw), oracle, rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(ops.lut_gemm_fused(x, book, qw), oracle,
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(_unfused_pipeline(x, book, qw), oracle,
+                                       rtol=1e-4, atol=1e-4)
+
+            t_kernel = timed(lambda: ops.lut_gemm(qa, qw))
+            t_jnp = timed(lambda: jax.jit(lut_gemm_jnp)(qa, qw))
+            t_fused = timed(lambda: ops.lut_gemm_fused(x, book, qw))
+            t_unfused = timed(lambda: _unfused_pipeline(x, book, qw))
+            win = t_unfused / t_fused
+            print(f"{tier},{shape},{t_kernel:.0f},{t_jnp:.0f},{t_fused:.0f},"
+                  f"{t_unfused:.0f},{win:.2f}x")
+            record("lut_gemm_measured", tier=tier, shape=shape, m=m,
+                   k=MEAS_K, n=MEAS_N, kernel_us=round(t_kernel, 1),
+                   jnp_us=round(t_jnp, 1), fused_us=round(t_fused, 1),
+                   unfused_us=round(t_unfused, 1),
+                   fused_speedup=round(win, 2), interpret=interp,
+                   exact_vs_counting_oracle=True)
+            if shape == "decode":
+                # the fusion's reason to exist: kill the idx HBM roundtrip +
+                # second dispatch on the latency-critical decode step
+                assert t_fused < t_unfused, (
+                    f"{tier}: fused quantize+GEMM ({t_fused:.0f}us) must beat "
+                    f"the two-dispatch pipeline ({t_unfused:.0f}us) at decode")
+    emit("lut_fused_vs_unfused_decode", 0.0,
+         "fused single-dispatch beat bucketize+GEMM at decode for all tiers")
+
+    # --- block autotune sweep on the decode shape ---------------------------
+    qw = quantize_weight(jax.random.normal(jax.random.PRNGKey(1), (MEAS_K, MEAS_N)), 4)
+    book = fit_activation_codebook(calib, 4)
+    x = jax.random.normal(jax.random.PRNGKey(8), (SHAPES["decode"], MEAS_K))
+    cands = ((8, 128, 256), (64, 128, 256), (128, 128, 256), (8, 128, 512))
+    bm, bn, bk = ops.autotune_lut_blocks(x, book, qw, candidates=cands)
+    print(f"autotune_decode,w4a4,block_m={bm},block_n={bn},block_k={bk}")
+    record("lut_block_autotune", tier="w4a4", shape="decode",
+           block_m=bm, block_n=bn, block_k=bk,
+           candidates=[list(c) for c in cands], interpret=interp)
+
+
+def run() -> None:
+    run_analytic()
+    run_measured()
+
+
 if __name__ == "__main__":
+    # Standalone entry writes the same BENCH json run.py would
+    from benchmarks import common
+    from benchmarks.run import _write_result
+
+    _t0 = time.time()
     run()
+    _write_result("bench_lut_config", True, time.time() - _t0,
+                  list(common.RECORDS))

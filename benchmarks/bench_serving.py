@@ -345,7 +345,62 @@ def run(smoke: bool = False) -> None:
         assert st["mixed_steps"] > 0, "no packed step mixed prefill with decode"
 
     run_overhead_phase(model, qparams, spec, cache_len, smoke)
+    run_kernel_route_phase(model, qparams, spec, smoke)
     run_speculative_phase(smoke)
+
+
+def run_kernel_route_phase(model, qparams, spec, smoke: bool) -> None:
+    """Serve one trace through both GEMM routes: ``kernel=pallas`` (fused
+    Pallas quantize+index-GEMM) vs ``kernel=jnp`` (factorized form).
+
+    The CI gate (runs in --smoke too): outputs are token-identical — index
+    selection is bit-equal across routes — and the pallas engine's stats
+    prove the kernel path actually compiled in (``lut_kernel_calls > 0``,
+    zero fallbacks). Wall time is recorded, not asserted: off-TPU the
+    kernel runs in interpret mode and loses to XLA by design (kernel=auto
+    picks jnp on CPU for exactly that reason)."""
+    import repro.core.kernel_routing as kr
+    from repro.core.qlinear import with_kernel_route
+
+    cfg = get_smoke_config("llama3_2_1b")
+    trace = make_trace(cfg.vocab_size, seed=11, n_requests=3 if smoke else 8,
+                       prompt_range=(8, 32))
+    cache_len = 32 + BUDGET_RANGE[1] + 16
+    outs, times, calls = {}, {}, {}
+    for route in ("jnp", "pallas"):
+        eng = ServingEngine(
+            model, with_kernel_route(qparams, route),
+            ServeConfig.from_spec(spec, cache_len=cache_len, block_size=16,
+                                  prefill_chunk=32),
+            batch_slots=SLOTS)
+        before = kr.snapshot()
+        t0 = time.perf_counter()
+        for t in trace:
+            eng.scheduler.submit(t.prompt, t.budget)
+        outs[route] = eng.scheduler.run()
+        times[route] = time.perf_counter() - t0
+        calls[route] = kr.kernel_calls() - before.get("_kernel_calls", 0)
+        st = eng.stats
+    assert outs["pallas"] == outs["jnp"], \
+        "kernel routing changed greedy outputs"
+    assert calls["pallas"] > 0, \
+        "kernel=pallas served without routing any projection to the kernel"
+    assert calls["jnp"] == 0, "kernel=jnp route leaked onto the Pallas kernel"
+    assert st["lut_kernel_calls"] > 0 and st["lut_fallbacks"] == 0, st
+    print(f"kernel_route,-,-,-,pallas={times['pallas']:.2f}s "
+          f"jnp={times['jnp']:.2f}s kernel_dispatches={calls['pallas']} "
+          f"token_identical=True (interpret={jax.default_backend() != 'tpu'})")
+    emit("serving_kernel_route", 0.0,
+         f"pallas route token-identical to jnp; {calls['pallas']} projections "
+         f"routed to the fused kernel, 0 fallbacks")
+    record("serving_kernel_route",
+           wall_s_pallas=round(times["pallas"], 2),
+           wall_s_jnp=round(times["jnp"], 2),
+           kernel_dispatches=calls["pallas"],
+           fallbacks=st["lut_fallbacks"],
+           token_identical=True,
+           interpret=jax.default_backend() != "tpu",
+           config={"smoke": smoke, "n_requests": len(trace), "slots": SLOTS})
 
 
 def run_overhead_phase(model, qparams, spec, cache_len: int, smoke: bool) -> None:

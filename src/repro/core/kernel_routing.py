@@ -1,0 +1,146 @@
+"""LUT-GEMM kernel routing policy + per-tier dispatch accounting.
+
+Every quantized projection resolves a route — ``pallas`` (the fused
+quantize+index-GEMM Pallas kernel, ``repro/kernels/lut_gemm.py``) or ``jnp``
+(the factorized ``core/lut_gemm.py`` form) — from its
+``QLinearConfig.kernel`` field:
+
+  auto   : Pallas on TPU backends, jnp elsewhere (interpret-mode Pallas is
+           far slower than XLA's fused gather+einsum on CPU). The
+           ``REPRO_LUT_KERNEL`` env var overrides the auto default with the
+           same spelling as ``REPRO_PAGED_KERNEL``: "0"/"off"/"false" forces
+           jnp, any other value forces the kernel.
+  pallas : always the kernel (interpret mode off-TPU).
+  jnp    : always the factorized jnp form.
+
+Route resolution happens at **trace time** (``qlinear_apply`` runs under
+jit), so the dispatch counters here record which GEMM path was *compiled
+into* each jaxpr — one count per projection per traced shape, not per
+executed step. That is exactly the observability question ("which path
+actually ran?") a trace-time decision can answer truthfully; incrementing
+per execution would need a host callback on the serving hot path. The
+serving scheduler surfaces these counts as lazy gauges in the PR-6
+telemetry registry (``serving_lut_kernel_calls`` / ``serving_lut_jnp_calls``
+/ ``serving_lut_fallbacks``) and in ``ServingEngine.stats``.
+
+Fallbacks are never silent: an unsupported tier demoted from a requested
+``pallas`` route increments a counter AND warns once per reason
+(the pre-routing code silently dropped W8 to jnp even with
+``use_kernel=True``).
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+from collections import Counter
+
+import jax
+
+__all__ = [
+    "resolve_route",
+    "record_dispatch",
+    "record_fallback",
+    "dispatch_counts",
+    "kernel_calls",
+    "jnp_calls",
+    "fallback_count",
+    "snapshot",
+    "reset",
+]
+
+ROUTES = ("auto", "pallas", "jnp")
+
+# (tier, route) -> number of trace-time route resolutions, e.g.
+# ("w4a4", "pallas") -> 3. Process-global by design: qlinear_apply has no
+# handle on an engine, and the telemetry registry reads these lazily.
+_DISPATCH: Counter = Counter()
+# reason -> count of explicit pallas->jnp demotions
+_FALLBACKS: Counter = Counter()
+_WARNED: set[str] = set()
+
+# Resolved on first use, NOT at import: jax.default_backend() initializes
+# the backend, which would break platform overrides in programs that merely
+# import the core stack. Tests monkeypatch this to force a route.
+_AUTO_DEFAULT: bool | None = None
+
+
+def _auto_default() -> bool:
+    """auto-route default: kernel on TPU, jnp elsewhere; env-overridable."""
+    global _AUTO_DEFAULT
+    if _AUTO_DEFAULT is None:
+        env = os.environ.get("REPRO_LUT_KERNEL", "auto").strip().lower()
+        if env in ("", "auto"):
+            _AUTO_DEFAULT = jax.default_backend() == "tpu"
+        else:
+            _AUTO_DEFAULT = env not in ("0", "off", "false")
+    return _AUTO_DEFAULT
+
+
+def resolve_route(kernel: str, use_kernel: bool = False) -> str:
+    """Resolve a ``QLinearConfig.kernel`` policy to a concrete route.
+
+    ``use_kernel`` is the legacy boolean opt-in: under ``kernel="auto"`` it
+    still forces the Pallas route so pre-policy configs keep their meaning.
+    """
+    if kernel == "pallas":
+        return "pallas"
+    if kernel == "jnp":
+        return "jnp"
+    if kernel != "auto":
+        raise ValueError(f"kernel must be one of {ROUTES}, got {kernel!r}")
+    if use_kernel:
+        return "pallas"
+    return "pallas" if _auto_default() else "jnp"
+
+
+def record_dispatch(tier: str, route: str) -> None:
+    _DISPATCH[(tier, route)] += 1
+
+
+def record_fallback(tier: str, reason: str) -> None:
+    """Explicit pallas->jnp demotion: counted, warned once per reason."""
+    _FALLBACKS[reason] += 1
+    _DISPATCH[(tier, "fallback")] += 1
+    if reason not in _WARNED:
+        _WARNED.add(reason)
+        warnings.warn(
+            f"LUT-GEMM kernel route unavailable for tier {tier}: {reason}; "
+            f"falling back to the jnp factorized path",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def dispatch_counts() -> dict[str, int]:
+    """``{"<tier>/<route>": count}`` snapshot of every recorded dispatch."""
+    return {f"{tier}/{route}": n for (tier, route), n in sorted(_DISPATCH.items())}
+
+
+def kernel_calls() -> int:
+    """Total projections routed to the Pallas kernel (trace-time count)."""
+    return sum(n for (_, route), n in _DISPATCH.items() if route == "pallas")
+
+
+def jnp_calls() -> int:
+    return sum(n for (_, route), n in _DISPATCH.items() if route == "jnp")
+
+
+def fallback_count() -> int:
+    return sum(_FALLBACKS.values())
+
+
+def snapshot() -> dict[str, int]:
+    """Flat copy for delta-based assertions (benchmarks, tests)."""
+    d = dispatch_counts()
+    d["_kernel_calls"] = kernel_calls()
+    d["_jnp_calls"] = jnp_calls()
+    d["_fallbacks"] = fallback_count()
+    return d
+
+
+def reset() -> None:
+    """Clear counters (tests). The one-time-warning set is kept — warning
+    spam does not become useful again just because counters were zeroed."""
+    _DISPATCH.clear()
+    _FALLBACKS.clear()

@@ -28,6 +28,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import codebook as cb
 from repro.core.quantize import (
     QuantizedActivation,
     QuantizedWeight,
@@ -41,6 +42,7 @@ __all__ = [
     "detect_outliers_static",
     "static_thresholds",
     "outlier_residuals",
+    "outlier_residuals_direct",
     "compensate_gather",
     "compensate_scatter",
     "orizuru_comparisons",
@@ -124,6 +126,34 @@ def outlier_residuals(out: OutlierSet, qa: QuantizedActivation) -> jax.Array:
     deq = dequantize_activation(qa)
     q_at = jnp.take_along_axis(deq, out.channels, axis=-1)
     return (out.values - q_at) * out.mask
+
+
+def outlier_residuals_direct(
+    out: OutlierSet, scale: jax.Array, codebook: jax.Array,
+    mul_form: bool = False,
+) -> jax.Array:
+    """r = x - q(x) computed from the outlier VALUES alone — no full
+    QuantizedActivation required.
+
+    The fused-kernel route never materializes activation indices (they live
+    only in VMEM), but quantization is elementwise, so q(x) at the 2k
+    outlier channels per token can be recomputed from the gathered values
+    and the per-token ``scale`` directly. Bit-identical to
+    :func:`outlier_residuals` as long as the compare form matches the dtype
+    ``quantize_activation`` would have used: ``mul_form=False`` for f32
+    inputs (searchsorted on x/s), ``mul_form=True`` for bf16 (sum-of-
+    compares against s*b_i).
+    """
+    v = out.values  # f32 (..., T), originals gathered at detection time
+    if mul_form:
+        b = cb.boundaries_from_centroids(codebook)
+        idx = jnp.zeros(v.shape, jnp.int32)
+        for i in range(b.shape[0]):
+            idx += (v >= scale * b[i]).astype(jnp.int32)
+    else:
+        idx = cb.assign_via_boundaries((v / scale).astype(jnp.float32), codebook)
+    deq = codebook[idx] * scale
+    return (v - deq) * out.mask
 
 
 def compensate_gather(

@@ -5,8 +5,15 @@
       + bias
 
 This is the composable unit the model zoo uses for quantized inference. The
-main branch can run through the jnp factorized form or the Pallas kernel
-(``repro.kernels.ops.lut_gemm``); both are exact vs the counting-form oracle.
+main branch routes per the ``kernel`` policy field (see
+``repro.core.kernel_routing``): ``pallas`` runs the FUSED quantize+index-GEMM
+Pallas kernel (activation indices never leave VMEM, no dequantized (K, N)
+weight ever exists — W3/W4 nibble and W5-W8 byte tiers); ``jnp`` runs
+quantize-then-factorized-GEMM; ``auto`` picks pallas on TPU, jnp on CPU.
+Both routes are exact vs the counting-form oracle and token-identical to
+each other under greedy serving (index selection is bit-equal; see
+``kernels/ops.lut_gemm_fused``). Fallbacks off a requested pallas route are
+explicit — counted in the dispatch registry and warned once — never silent.
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+import repro.core.kernel_routing as kr
 import repro.core.outlier as ol
 import repro.core.quantize as qz
 from repro.core.lut_gemm import lut_gemm as _lut_gemm_jnp
@@ -28,10 +36,12 @@ __all__ = [
     "QLinearParams",
     "quantize_linear",
     "qlinear_apply",
+    "with_kernel_route",
 ]
 
 Detection = Literal["dynamic", "static", "static_dense", "none"]
 CompMode = Literal["auto", "gather", "scatter"]
+KernelRoute = Literal["auto", "pallas", "jnp"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +57,16 @@ class QLinearConfig:
     comp_auto_tokens: int = 64  # comp_mode="auto": gather at <= this many tokens
     scale_mode: qz.ScaleMode = "rms"
     compute_dtype: object = jnp.float32
-    use_kernel: bool = False  # route main branch through the Pallas kernel
+    use_kernel: bool = False  # legacy boolean opt-in; kernel="pallas" spelling
+    # main-branch GEMM routing policy (kernel_routing.resolve_route):
+    # auto = Pallas on TPU / jnp factorized on CPU (REPRO_LUT_KERNEL env
+    # overrides the auto default, mirroring REPRO_PAGED_KERNEL)
+    kernel: KernelRoute = "auto"
+
+    def __post_init__(self):
+        if self.kernel not in kr.ROUTES:
+            raise ValueError(
+                f"kernel must be one of {kr.ROUTES}, got {self.kernel!r}")
 
 
 @partial(
@@ -99,6 +118,21 @@ def quantize_linear(
                          thr_hi=thr_hi, cfg=cfg)
 
 
+def with_kernel_route(params, kernel: KernelRoute):
+    """Return a copy of a (tree of) QLinearParams with the routing policy
+    swapped — codebooks/indices untouched, so outputs stay comparable
+    bit-for-bit across routes (tests + benchmarks flip routes this way
+    instead of re-quantizing)."""
+    def swap(p):
+        if isinstance(p, QLinearParams):
+            return dataclasses.replace(
+                p, cfg=dataclasses.replace(p.cfg, kernel=kernel))
+        return p
+
+    return jax.tree_util.tree_map(
+        swap, params, is_leaf=lambda p: isinstance(p, QLinearParams))
+
+
 def _tokens(x: jax.Array) -> int:
     return math.prod(x.shape[:-1]) if x.ndim > 1 else 1
 
@@ -113,16 +147,34 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
     """
     cfg = p.cfg if cfg is None else cfg
     out_dtype = x.dtype
-    qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
+    a_nbits = int(p.act_codebook.shape[0]).bit_length() - 1
+    tier = f"w{p.qw.nbits}a{a_nbits}"
+    mul_form = x.dtype == jnp.bfloat16
+
+    route = kr.resolve_route(cfg.kernel, cfg.use_kernel)
+    if route == "pallas" and a_nbits > 4:
+        # the fused kernel's in-tile bucketize is a 2^a - 1 compare chain:
+        # fine through A4 (15 compares), untenable for 256-entry activation
+        # codebooks. EXPLICIT fallback — counted + warned, never silent.
+        kr.record_fallback(tier, f"activation codebook has 2^{a_nbits} "
+                                 "entries (> 16); fused bucketize supports "
+                                 "a_bits <= 4")
+        route = "jnp"
+    kr.record_dispatch(tier, route)
 
     # ---- main branch: look-ahead LUT-GEMM over ALL activations ------------
-    if cfg.use_kernel and p.qw.nbits <= 4 and qa.nbits <= 4:
-        # the Pallas kernel speaks nibble-packed int4; wider codebooks
-        # (mixed-precision W8 layers) take the jnp factorized form
+    qa = None
+    if route == "pallas":
         from repro.kernels import ops as kops
 
-        y = kops.lut_gemm(qa, p.qw, out_dtype=cfg.compute_dtype)
+        # ONE fused Pallas dispatch: bucketize x in VMEM + index-GEMM.
+        # Handles every weight tier (W<=4 nibble-packed, W5-8 byte-packed);
+        # no QuantizedActivation and no dequantized (K, N) weight exist.
+        y = kops.lut_gemm_fused(x, p.act_codebook, p.qw,
+                                scale_mode=cfg.scale_mode,
+                                out_dtype=cfg.compute_dtype)
     else:
+        qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
         y = _lut_gemm_jnp(qa, p.qw, out_dtype=cfg.compute_dtype,
                           compute_dtype=cfg.compute_dtype)
 
@@ -134,6 +186,11 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
         # EXPERIMENTS §Perf P1); thresholds are offline (paper's OASIS-S) and
         # the mask/residual chain fuses to nothing. Decode keeps the dynamic
         # Orizuru path (sorting 1 token is free; accuracy is higher).
+        if qa is None:
+            # kernel route: the dense residual needs q(x) at EVERY channel;
+            # recompute it as the same elementwise chain (XLA fuses it into
+            # the mask/where below — no idx roundtrip, main GEMM unaffected)
+            qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
         deq = qz.dequantize_activation(qa, dtype=cfg.compute_dtype)
         xf = x.astype(cfg.compute_dtype)
         mask = (xf > p.thr_hi) | (xf < p.thr_lo)
@@ -148,7 +205,15 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
             outs = ol.detect_outliers_static(
                 x.astype(jnp.float32), p.thr_lo, p.thr_hi, k
             )
-        r = ol.outlier_residuals(outs, qa)
+        if qa is None:
+            # kernel route: q(x) at the 2k outlier channels, recomputed from
+            # the gathered values (quantization is elementwise) — bit-equal
+            # to the qa-based residual, without materializing indices
+            r = ol.outlier_residuals_direct(
+                outs, qz.token_scale(x, cfg.scale_mode), p.act_codebook,
+                mul_form=mul_form)
+        else:
+            r = ol.outlier_residuals(outs, qa)
         mode = cfg.comp_mode
         if mode == "auto":
             # decode-ish (few tokens): row-gather; prefill-ish: scatter+dense GEMM

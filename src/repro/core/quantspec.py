@@ -25,6 +25,13 @@ KV-cache treatment is a first-class spec field (``kv_bits`` / ``kv_dtype``)
 rather than a per-layer rule: the cache pool is one global allocation shared
 by the serving scheduler, not a per-projection decision.
 
+GEMM kernel routing IS a per-layer rule: ``kernel`` ("auto" | "pallas" |
+"jnp") is a plain :class:`QLinearConfig` field, so
+``rules=[("mlp/*", {"kernel": "pallas"})]`` routes just the MLP projections
+through the fused Pallas quantize+index-GEMM while attention stays on the
+jnp factorized form (see ``repro.core.kernel_routing`` for the auto
+semantics and the dispatch counters).
+
 Scan-stacked models (``cfg.scan_layers=True``) share one path per projection
 (``blocks/attn/wq`` covers every layer in the stack), so per-layer-index
 rules like ``blocks/0/*`` require ``scan_layers=False``.

@@ -1,22 +1,44 @@
-"""Pallas TPU kernel: W4A4 K-Means index GEMM (the paper's LUT-GEMM on MXU).
+"""Pallas TPU kernels: K-Means index GEMMs (the paper's LUT-GEMM on MXU).
 
-TPU-native formulation of the Cartesian-product LUT GEMM (DESIGN.md §2):
-weight indices stay int4-packed in HBM; per 128-aligned VMEM tile we
+TPU-native formulation of the Cartesian-product LUT GEMM (DESIGN.md §2),
+in three variants sharing one tiling scheme:
 
-  1. unpack two 4-bit indices per byte (integer bit ops on the VPU),
-  2. "gather" centroids from the 16-entry codebook via compare-select
-     (a 16-way select IS the LUT lookup — the codebook lives in registers,
-     the TPU analogue of the ASIC's on-chip LUT),
-  3. feed the MXU with the dequantized tile; accumulate f32 partials across
-     the K grid dimension in the output block.
+* :func:`lut_gemm_kernel_call` — index-in, W4A4-style **nibble tier**
+  (``nbits <= 4``: two 4-bit weight indices per byte) and the byte-packed
+  **W5–W8 tier** (``byte_packed=True``: one index per byte). Per 128-aligned
+  VMEM tile we unpack indices with integer bit ops, look centroids up
+  on-chip, and feed the MXU with the dequantized tile, accumulating f32
+  partials across the K grid dimension.
 
-No dequantized weight matrix ever exists in HBM — HBM traffic is
-K·N/2 bytes of indices + 64 B of codebook, i.e. the paper's
-"no-dequantization" property on the side that bounds TPU decode throughput.
+* :func:`fused_lut_gemm_kernel_call` — **fused quantize+GEMM**: takes raw
+  activations plus their per-token scale, bucketizes against the activation
+  codebook's decision boundaries *inside the tile* (the Clustering-Unit
+  sum-of-compares, same formulation as ``kernels/bucketize.py``), and
+  immediately runs the index-GEMM. Activation indices exist only in VMEM —
+  the separate quantize pass and its idx HBM roundtrip are gone.
+
+Centroid lookup is tiered by codebook size:
+
+  2^n <= 16 : compare-select chain — 15 vselects IS the LUT lookup, the
+              codebook lives in registers (TPU analogue of the ASIC's
+              on-chip LUT).
+  2^n  > 16 : the chain is untenable at 256 entries (255 serial selects per
+              element), so the byte tier splits each index into two nibbles
+              and looks up ``book[16*hi + lo]`` via a one-hot matmul against
+              the codebook laid out as a (16, 16) VMEM table:
+              ``t[e, h] = book2d[h, lo[e]]`` (one (E,16)x(16,16) MXU dot),
+              then a 16-wide masked row-sum selects ``t[e, hi[e]]`` — 2x16
+              compares + one tiny matmul instead of 255 selects.
+
+No dequantized weight matrix ever exists in HBM — HBM traffic is the packed
+index bytes plus <= 1 KiB of codebook, i.e. the paper's "no-dequantization"
+property on the side that bounds TPU decode throughput.
 
 Scales (per-token, per-out-channel) are rank-1 and applied by the wrapper in
-``ops.py`` — keeping the kernel a pure index-GEMM keeps the LUT math testable
-in isolation.
+``ops.py`` — keeping the kernels pure index-GEMMs keeps the LUT math testable
+in isolation. M/N/K are all padded here (K via in-kernel masking of the
+activation tile, so padded columns contribute exactly zero regardless of
+what ``book[0]`` is).
 """
 
 from __future__ import annotations
@@ -27,14 +49,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lut_gemm_kernel_call"]
+__all__ = ["lut_gemm_kernel_call", "fused_lut_gemm_kernel_call"]
 
 
 def _deq_select(idx: jax.Array, book: jax.Array, n_entries: int) -> jax.Array:
     """Centroid lookup as a compare-select chain (VPU-friendly 16-way LUT).
 
-    out[...] = book[idx[...]] without a hardware gather: for the 2^4-entry
-    codebooks of W4A4 this is 15 vselects — cheap relative to the MXU dot it
+    out[...] = book[idx[...]] without a hardware gather: for codebooks of
+    <= 2^4 entries this is <= 15 vselects — cheap relative to the MXU dot it
     feeds, and it vectorizes perfectly on 8x128 vregs.
     """
     out = jnp.full(idx.shape, book[0], jnp.float32)
@@ -43,78 +65,235 @@ def _deq_select(idx: jax.Array, book: jax.Array, n_entries: int) -> jax.Array:
     return out
 
 
-def _kernel(a_idx_ref, w_packed_ref, a_book_ref, w_book_ref, o_ref, *, n_a: int, n_w: int):
+def _lookup(idx: jax.Array, book2d: jax.Array, nbits: int) -> jax.Array:
+    """book[idx] for a codebook stored as a padded (16, 16) VMEM table.
+
+    nbits <= 4 uses the compare-select chain on the table's flat head;
+    nbits in (5..8] uses the nibble-decomposed one-hot matmul (module
+    docstring): ``book[idx] = sum_h 1[hi=h] * (onehot(lo) @ book2d.T)[h]``.
+    """
+    if nbits <= 4:
+        return _deq_select(idx, book2d.reshape(-1), 2**nbits)
+    hi = idx >> 4
+    lo = idx & 0xF
+    lane = jax.lax.broadcasted_iota(jnp.int32, (*idx.shape, 16), idx.ndim)
+    oh_lo = (lo[..., None] == lane).astype(jnp.float32)  # (..., 16)
+    t = jnp.dot(
+        oh_lo.reshape(-1, 16), book2d.T, preferred_element_type=jnp.float32
+    ).reshape(*idx.shape, 16)  # t[e, h] = book2d[h, lo[e]] = book[16h + lo[e]]
+    oh_hi = (hi[..., None] == lane).astype(jnp.float32)
+    return jnp.sum(oh_hi * t, axis=-1)
+
+
+def _deq_weight_tile(w_vals: jax.Array, book2d: jax.Array, n_w: int,
+                     byte_packed: bool) -> jax.Array:
+    """Dequantize one (bk, ...) weight-index tile to (bk, bn) f32."""
+    if byte_packed:  # (bk, bn) uint8, one index per byte
+        return _lookup(w_vals.astype(jnp.int32), book2d, n_w)
+    lo = _lookup((w_vals & 0xF).astype(jnp.int32), book2d, n_w)
+    hi = _lookup((w_vals >> 4).astype(jnp.int32), book2d, n_w)
+    # Interleave even/odd output channels on the minor axis: (bk, bn//2, 2) ->
+    # (bk, bn). A minor-dim relayout on TPU; deinterleaved packing is the
+    # documented alternative if this ever dominates (see EXPERIMENTS §Perf).
+    return jnp.stack([lo, hi], axis=-1).reshape(w_vals.shape[0], -1)
+
+
+def _mask_padded_k(a: jax.Array, block_k: int, k_true: int) -> jax.Array:
+    """Zero activation columns past the true K (padded-K tiles only).
+
+    Zeroing the activation side is sufficient: the padded weight rows then
+    multiply exact zeros, so the pad index value (0 -> book[0] != 0) never
+    leaks into the accumulator.
+    """
+    col = pl.program_id(2) * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, a.shape, 1
+    )
+    return jnp.where(col < k_true, a, 0.0)
+
+
+def _pad_book_2d(book: jax.Array) -> jax.Array:
+    """Codebook -> zero-padded 256-entry (16, 16) table (row = high nibble)."""
+    book = book.astype(jnp.float32).reshape(-1)
+    return jnp.pad(book, (0, 256 - book.shape[0])).reshape(16, 16)
+
+
+def _index_kernel(a_idx_ref, w_ref, a_book_ref, w_book_ref, o_ref, *,
+                  n_a: int, n_w: int, byte_packed: bool, block_k: int,
+                  k_true: int, masked_k: bool):
     """Grid: (M/bm, N/bn, K/bk); K is the innermost (arbitrary) dimension."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a_book = a_book_ref[...]
-    w_book = w_book_ref[...]
-
-    a = _deq_select(a_idx_ref[...], a_book, 2**n_a)  # (bm, bk) f32
-
-    packed = w_packed_ref[...]  # (bk, bn//2) uint8
-    lo = _deq_select((packed & 0xF).astype(jnp.int32), w_book, 2**n_w)
-    hi = _deq_select((packed >> 4).astype(jnp.int32), w_book, 2**n_w)
-    # Interleave even/odd output channels on the minor axis: (bk, bn//2, 2) ->
-    # (bk, bn). A minor-dim relayout on TPU; deinterleaved packing is the
-    # documented alternative if this ever dominates (see EXPERIMENTS §Perf).
-    w = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
-
+    a = _lookup(a_idx_ref[...], a_book_ref[...], n_a)  # (bm, bk) f32
+    if masked_k:
+        a = _mask_padded_k(a, block_k, k_true)
+    w = _deq_weight_tile(w_ref[...], w_book_ref[...], n_w, byte_packed)
     o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
 
 
+def _fused_kernel(x_ref, s_ref, w_ref, bounds_ref, a_book_ref, w_book_ref,
+                  o_ref, *, n_a: int, n_w: int, byte_packed: bool,
+                  mul_form: bool, block_k: int, k_true: int, masked_k: bool):
+    """Bucketize-then-GEMM in one pass: activation indices never leave VMEM.
+
+    ``mul_form`` selects the compare formulation so indices are bit-identical
+    to ``core.quantize.quantize_activation`` for the matching input dtype:
+    f32 compares ``x/s >= b_i`` (the searchsorted path), bf16 compares
+    ``x >= s*b_i`` (the fused sum-of-compares path).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    s = s_ref[...].astype(jnp.float32)  # (bm, 1) per-token scale
+    b = bounds_ref[...]  # (2^n_a - 1,) decision boundaries
+    idx = jnp.zeros(x.shape, jnp.int32)
+    if mul_form:
+        for i in range(2**n_a - 1):
+            idx += (x >= s * b[i]).astype(jnp.int32)
+    else:
+        xn = x / s
+        for i in range(2**n_a - 1):
+            idx += (xn >= b[i]).astype(jnp.int32)
+
+    a = _lookup(idx, a_book_ref[...], n_a)
+    if masked_k:
+        a = _mask_padded_k(a, block_k, k_true)
+    w = _deq_weight_tile(w_ref[...], w_book_ref[...], n_w, byte_packed)
+    o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+def _grid_geometry(m: int, n: int, k: int, block_m: int | None,
+                   block_n: int | None, block_k: int | None,
+                   byte_packed: bool):
+    """Clamp block sizes and compute padded grid extents.
+
+    Byte tiers default to a smaller K block: the one-hot lookup holds two
+    (bk, bn, 16) f32 intermediates per tile (bk=256, bn=128 -> 4 MiB), and
+    the default keeps the working set well inside the ~16 MiB/core VMEM.
+
+    VMEM working set per step (nibble defaults, W4A4):
+      a_idx 128x512 int32 = 256 KiB, w 512x64 uint8 = 32 KiB,
+      deq tiles (128x512 + 512x128) f32 = 512 KiB, acc 128x128 f32 = 64 KiB
+    -> < 1 MiB, comfortable with double-buffering.
+    """
+    bm = min(block_m or 128, m)
+    bn = min(block_n or 128, n)
+    bk = min(block_k or (256 if byte_packed else 512), k)
+    if not byte_packed and bn % 2:
+        raise ValueError("block_n must be even (nibble packing)")
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    grid = ((m + pm) // bm, (n + pn) // bn, (k + pk) // bk)
+    return bm, bn, bk, pm, pn, pk, grid
+
+
 def lut_gemm_kernel_call(
-    a_idx: jax.Array,  # (M, K) int32
-    w_packed: jax.Array,  # (K, N//2) uint8
+    a_idx: jax.Array,  # (M, K) int32 activation codebook indices
+    w_packed: jax.Array,  # nibble: (K, N//2) uint8; byte: (K, N) uint8
     a_book: jax.Array,  # (2^nA,) f32
     w_book: jax.Array,  # (2^nW,) f32
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    byte_packed: bool = False,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
-    """Tiled pallas_call. M/N are padded here; K must divide block_k-clamped.
+    """Tiled index-GEMM pallas_call; M, N and K are all padded here.
 
-    VMEM working set per step (defaults, W4A4):
-      a_idx 128x512 int32 = 256 KiB, w 512x64 uint8 = 32 KiB,
-      deq tiles (128x512 + 512x128) f32 = 512 KiB, acc 128x128 f32 = 64 KiB
-    -> < 1 MiB, comfortably inside the ~16 MiB/core VMEM with double-buffering.
+    Returns the unscaled (M, N) f32 index-GEMM
+    ``Y[m,n] = sum_k aBook[aIdx[m,k]] * wBook[wIdx[k,n]]``.
     """
     m, k = a_idx.shape
-    n = w_packed.shape[1] * 2
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    if k % bk:
-        raise ValueError(f"K={k} must be divisible by block_k={bk}")
-    if bn % 2:
-        raise ValueError("block_n must be even (nibble packing)")
-
-    # pad M and N up to block multiples (garbage rows/cols sliced off below)
-    pm = (-m) % bm
-    pn = (-n) % bn
-    if pm:
-        a_idx = jnp.pad(a_idx, ((0, pm), (0, 0)))
-    if pn:
-        w_packed = jnp.pad(w_packed, ((0, 0), (0, pn // 2)))
-    gm, gn, gk = (m + pm) // bm, (n + pn) // bn, k // bk
+    n = w_packed.shape[1] * (1 if byte_packed else 2)
+    bm, bn, bk, pm, pn, pk, grid = _grid_geometry(
+        m, n, k, block_m, block_n, block_k, byte_packed)
+    if pm or pk:
+        a_idx = jnp.pad(a_idx, ((0, pm), (0, pk)))
+    if pn or pk:
+        wn_pad = pn if byte_packed else pn // 2
+        w_packed = jnp.pad(w_packed, ((0, pk), (0, wn_pad)))
+    wn_block = bn if byte_packed else bn // 2
 
     out = pl.pallas_call(
         functools.partial(
-            _kernel,
+            _index_kernel,
             n_a=int(a_book.shape[0]).bit_length() - 1,
             n_w=int(w_book.shape[0]).bit_length() - 1,
+            byte_packed=byte_packed, block_k=bk, k_true=k, masked_k=pk > 0,
         ),
-        grid=(gm, gn, gk),
+        grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec(a_book.shape, lambda i, j, kk: (0,)),
-            pl.BlockSpec(w_book.shape, lambda i, j, kk: (0,)),
+            pl.BlockSpec((bk, wn_block), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((16, 16), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((16, 16), lambda i, j, kk: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
         interpret=interpret,
-    )(a_idx, w_packed, a_book, w_book)
+    )(a_idx, w_packed, _pad_book_2d(a_book), _pad_book_2d(w_book))
+    return out[:m, :n]
+
+
+def fused_lut_gemm_kernel_call(
+    x: jax.Array,  # (M, K) raw activations (f32 or bf16)
+    scale: jax.Array,  # (M, 1) f32 per-token scale (full-K reduction, rank-1)
+    w_packed: jax.Array,  # nibble: (K, N//2) uint8; byte: (K, N) uint8
+    bounds: jax.Array,  # (2^nA - 1,) f32 activation decision boundaries
+    a_book: jax.Array,  # (2^nA,) f32
+    w_book: jax.Array,  # (2^nW,) f32
+    *,
+    byte_packed: bool = False,
+    mul_form: bool = False,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused activation-quantize + index-GEMM (unscaled (M, N) f32 output).
+
+    The per-token scale needs a full-K reduction so it is computed by the
+    caller (a rank-1 pass XLA fuses); everything O(M*K) — bucketize, index,
+    centroid lookup — happens inside the tile. Padded rows must carry a
+    nonzero ``scale`` (the ops.py wrapper pads with ones) so the in-kernel
+    division stays NaN-free; padded rows are sliced off regardless.
+    """
+    m, k = x.shape
+    n = w_packed.shape[1] * (1 if byte_packed else 2)
+    bm, bn, bk, pm, pn, pk, grid = _grid_geometry(
+        m, n, k, block_m, block_n, block_k, byte_packed)
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pm:
+        scale = jnp.pad(scale, ((0, pm), (0, 0)), constant_values=1.0)
+    if pn or pk:
+        wn_pad = pn if byte_packed else pn // 2
+        w_packed = jnp.pad(w_packed, ((0, pk), (0, wn_pad)))
+    wn_block = bn if byte_packed else bn // 2
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            n_a=int(a_book.shape[0]).bit_length() - 1,
+            n_w=int(w_book.shape[0]).bit_length() - 1,
+            byte_packed=byte_packed, mul_form=mul_form,
+            block_k=bk, k_true=k, masked_k=pk > 0,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, wn_block), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(bounds.shape, lambda i, j, kk: (0,)),
+            pl.BlockSpec((16, 16), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((16, 16), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=interpret,
+    )(x, scale.astype(jnp.float32), w_packed, bounds.astype(jnp.float32),
+      _pad_book_2d(a_book), _pad_book_2d(w_book))
     return out[:m, :n]

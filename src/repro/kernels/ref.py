@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["lut_gemm_ref", "bucketize_ref", "topk_outlier_ref", "paged_attn_ref",
+__all__ = ["lut_gemm_ref", "lut_gemm_byte_ref", "fused_lut_gemm_ref",
+           "bucketize_ref", "topk_outlier_ref", "paged_attn_ref",
            "paged_attn_quant_ref"]
 
 _NEG_INF = float(jnp.finfo(jnp.float32).min)
@@ -29,6 +30,44 @@ def lut_gemm_ref(
     a = a_book[a_idx].astype(jnp.float32)
     w = w_book[w_idx].astype(jnp.float32)
     return a @ w
+
+
+def lut_gemm_byte_ref(
+    a_idx: jax.Array,  # (M, K) int32 activation codebook indices
+    w_idx: jax.Array,  # (K, N) uint8, ONE weight index per byte (W5-W8 tier)
+    a_book: jax.Array,  # (2^nA,) f32
+    w_book: jax.Array,  # (2^nW,) f32
+) -> jax.Array:
+    """Byte-tier unscaled index-GEMM: Y[m,n] = Σ_k aBook[aIdx] * wBook[wIdx]."""
+    a = a_book[a_idx].astype(jnp.float32)
+    w = w_book[w_idx.astype(jnp.int32)].astype(jnp.float32)
+    return a @ w
+
+
+def fused_lut_gemm_ref(
+    x: jax.Array,  # (M, K) raw activations
+    scale: jax.Array,  # (M, 1) f32 per-token scale
+    w_packed: jax.Array,  # nibble (K, N//2) or byte (K, N) uint8
+    boundaries: jax.Array,  # (2^nA - 1,) f32
+    a_book: jax.Array,
+    w_book: jax.Array,
+    *,
+    byte_packed: bool = False,
+    mul_form: bool = False,
+) -> jax.Array:
+    """Quantize-then-index-GEMM oracle matching the fused kernel's contract
+    exactly: f32 inputs bucketize x/s (searchsorted form), bf16-style
+    ``mul_form`` compares x >= s*b (the fused sum-of-compares form)."""
+    xf = x.astype(jnp.float32)
+    if mul_form:
+        a_idx = jnp.sum(
+            xf[..., None] >= scale[..., None] * boundaries, axis=-1
+        ).astype(jnp.int32)
+    else:
+        a_idx = bucketize_ref(xf / scale, boundaries)
+    if byte_packed:
+        return lut_gemm_byte_ref(a_idx, w_packed, a_book, w_book)
+    return lut_gemm_ref(a_idx, w_packed, a_book, w_book)
 
 
 def bucketize_ref(x: jax.Array, boundaries: jax.Array) -> jax.Array:

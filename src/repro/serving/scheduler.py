@@ -249,6 +249,24 @@ class Scheduler:
                                  "high-water live-block fraction")
         tel.gauge("serving_queue_depth", fn=lambda: len(self._queue))
         tel.gauge("serving_running_requests", fn=lambda: len(self._running))
+        # LUT-GEMM route dispatch (core/kernel_routing): trace-time counts of
+        # which GEMM path each projection compiled into — pallas fused kernel
+        # vs jnp factorized vs explicit fallback. Lazy gauges over the
+        # process-global registry, so "which GEMM path actually ran" is
+        # answerable from any telemetry snapshot.
+        from repro.core import kernel_routing as _kr
+
+        self._g_lut = {
+            "lut_kernel_calls": tel.gauge(
+                "serving_lut_kernel_calls", fn=_kr.kernel_calls,
+                help="projections routed to the fused Pallas LUT-GEMM"),
+            "lut_jnp_calls": tel.gauge(
+                "serving_lut_jnp_calls", fn=_kr.jnp_calls,
+                help="projections routed to the jnp factorized LUT-GEMM"),
+            "lut_fallbacks": tel.gauge(
+                "serving_lut_fallbacks", fn=_kr.fallback_count,
+                help="explicit pallas->jnp tier fallbacks"),
+        }
         self._h_accept = tel.histogram(
             "serving_spec_accepted_per_round",
             linear_buckets(0.0, float(self.spec.k + 1) if self.spec else 1.0,
@@ -270,6 +288,8 @@ class Scheduler:
         zeros under ``telemetry="off"``). Read-only: mutate via telemetry."""
         d = {k: c.value for k, c in self._c.items()}
         d["peak_occupancy"] = self._g_peak.value
+        for k, g in self._g_lut.items():  # trace-time LUT route dispatch
+            d[k] = g.value
         return d
 
     # ----------------------------------------------------------------- host

@@ -5,9 +5,28 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")  # property tests need it
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:  # property tests need hypothesis; the parity sweeps below do not
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - env-dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):  # stub decorators so the defs still parse
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+        @staticmethod
+        def data():
+            return None
 
 from repro.core.codebook import boundaries_from_centroids
 from repro.core.outlier import detect_outliers_topk
@@ -62,12 +81,24 @@ def test_lut_gemm_kernel_3bit_activations():
                                rtol=1e-5, atol=1e-4)
 
 
-def test_lut_gemm_kernel_rejects_bad_k():
+def test_lut_gemm_kernel_unaligned_k():
+    """K not divisible by block_k is PADDED (used to raise): padding columns
+    must contribute exactly zero, not book[0]*book[0] garbage."""
     a_book, w_book = _books(4)
-    a_idx = jnp.zeros((4, 100), jnp.int32)
-    w_packed = jnp.zeros((100, 8), jnp.uint8)
+    a_idx = jax.random.randint(jax.random.PRNGKey(0), (4, 100), 0, 16)
+    w_packed = jax.random.randint(jax.random.PRNGKey(1), (100, 8), 0, 256).astype(jnp.uint8)
+    y = lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_k=64)
+    np.testing.assert_allclose(y, ref.lut_gemm_ref(a_idx, w_packed, a_book, w_book),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_lut_gemm_kernel_rejects_odd_block_n():
+    """Nibble tier packs two columns per byte: odd block_n cannot tile it."""
+    a_book, w_book = _books(4)
+    a_idx = jnp.zeros((4, 128), jnp.int32)
+    w_packed = jnp.zeros((128, 8), jnp.uint8)
     with pytest.raises(ValueError):
-        lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_k=64)
+        lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_n=7)
 
 
 def test_ops_lut_gemm_matches_core_and_counting():
@@ -100,6 +131,102 @@ def test_lut_gemm_kernel_property(m, kb, n, seed):
     y = lut_gemm_kernel_call(a_idx, w_packed, a_book, w_book, block_m=16, block_n=32, block_k=64)
     np.testing.assert_allclose(y, ref.lut_gemm_ref(a_idx, w_packed, a_book, w_book),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# byte-packed weight tier (W5-W8) + W3
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w_nbits", [5, 6, 7, 8])
+def test_lut_gemm_kernel_byte_tier(w_nbits):
+    """One-hot-matmul 256-entry lookup == gather oracle, every byte tier."""
+    n_w = 2 ** w_nbits
+    a_book, w_book = _books(w_nbits, n_w=n_w)
+    a_idx = jax.random.randint(jax.random.PRNGKey(0), (9, 256), 0, 16)
+    w_idx = jax.random.randint(jax.random.PRNGKey(1), (256, 40), 0, n_w).astype(jnp.uint8)
+    y = lut_gemm_kernel_call(a_idx, w_idx, a_book, w_book, byte_packed=True,
+                             block_m=8, block_n=32, block_k=128)
+    np.testing.assert_allclose(y, ref.lut_gemm_byte_ref(a_idx, w_idx, a_book, w_book),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 64, 7), (33, 300, 130), (8, 512, 64)])
+def test_lut_gemm_kernel_byte_padding(m, k, n):
+    """Odd/unaligned M, K, N on the byte tier: padding must contribute zero."""
+    a_book, w_book = _books(9, n_w=256)
+    a_idx = jax.random.randint(jax.random.PRNGKey(m), (m, k), 0, 16)
+    w_idx = jax.random.randint(jax.random.PRNGKey(n), (k, n), 0, 256).astype(jnp.uint8)
+    y = lut_gemm_kernel_call(a_idx, w_idx, a_book, w_book, byte_packed=True)
+    np.testing.assert_allclose(y, ref.lut_gemm_byte_ref(a_idx, w_idx, a_book, w_book),
+                               rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("w_nbits", [3, 8])
+def test_ops_lut_gemm_matches_counting_w3_w8(w_nbits):
+    """ops.lut_gemm (nibble W3 / byte W8 dispatch) == counting-form oracle."""
+    from repro.core.lut_gemm import lut_gemm_counting
+
+    w = jax.random.normal(jax.random.PRNGKey(21), (192, 80))
+    x = jax.random.normal(jax.random.PRNGKey(22), (6, 192))
+    qw = quantize_weight(w, w_nbits)
+    qa = quantize_activation(x, fit_activation_codebook(x, 4))
+    np.testing.assert_allclose(ops.lut_gemm(qa, qw), lut_gemm_counting(qa, qw),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused quantize+GEMM kernel
+# ---------------------------------------------------------------------------
+
+def _fused_case(seed, m, k, n, w_nbits, dtype):
+    key = jax.random.PRNGKey(seed)
+    x = (jax.random.normal(key, (m, k)) * 2).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    qw = quantize_weight(w, w_nbits)
+    book = fit_activation_codebook(jax.random.normal(jax.random.fold_in(key, 2), (64, k)), 4)
+    return x, qw, book
+
+
+@pytest.mark.parametrize("m,k,n,w_nbits", [
+    (1, 128, 64, 4),      # decode M=1, nibble
+    (24, 300, 130, 4),    # everything ragged, nibble
+    (8, 256, 48, 8),      # byte tier
+    (33, 190, 66, 3),     # W3 nibble, odd K
+])
+def test_fused_kernel_matches_ref(m, k, n, w_nbits):
+    from repro.kernels.lut_gemm import fused_lut_gemm_kernel_call
+
+    x, qw, book = _fused_case(m * 31 + n, m, k, n, w_nbits, jnp.float32)
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 3 + 1e-6
+    b = boundaries_from_centroids(book)
+    y = fused_lut_gemm_kernel_call(x, s, qw.packed, b, book, qw.codebook,
+                                   byte_packed=w_nbits > 4, mul_form=False)
+    want = ref.fused_lut_gemm_ref(x, s, qw.packed, b, book, qw.codebook,
+                                  byte_packed=w_nbits > 4, mul_form=False)
+    np.testing.assert_allclose(y, want, rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ops_bit_identical_indices(dtype):
+    """lut_gemm_fused == quantize_activation + lut_gemm for both dtype forms
+    (f32 searchsorted form, bf16 sum-of-compares mul form) — the property
+    that makes kernel routing token-identical in serving."""
+    from repro.core.lut_gemm import lut_gemm as lut_jnp
+
+    x, qw, book = _fused_case(5, 16, 256, 64, 4, dtype)
+    y_fused = ops.lut_gemm_fused(x, book, qw)
+    qa = quantize_activation(x, book)
+    y_two = lut_jnp(qa, qw, out_dtype=jnp.float32, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(y_fused, y_two, rtol=2e-5, atol=1e-4)
+
+
+def test_fused_leading_batch_dims():
+    x, qw, book = _fused_case(6, 12, 128, 32, 4, jnp.float32)
+    x3 = x.reshape(3, 4, 128)
+    y3 = ops.lut_gemm_fused(x3, book, qw)
+    assert y3.shape == (3, 4, 32)
+    np.testing.assert_allclose(y3.reshape(12, 32), ops.lut_gemm_fused(x, book, qw),
+                               rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,209 @@
+"""Kernel routing policy: resolution, QuantSpec plumbing, dispatch
+accounting, explicit fallbacks, and pallas-vs-jnp parity through the full
+dual-branch QLinear (bias + outlier compensation composed in)."""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.kernel_routing as kr
+from repro.core.qlinear import (
+    QLinearConfig,
+    qlinear_apply,
+    quantize_linear,
+    with_kernel_route,
+)
+from repro.core.quantspec import QuantSpec
+
+
+def _layer(cfg: QLinearConfig, k=128, n=48, seed=0, bias=True):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (k, n))
+    calib = jax.random.normal(jax.random.fold_in(key, 1), (64, k)) * 1.5
+    b = jax.random.normal(jax.random.fold_in(key, 2), (n,)) if bias else None
+    return quantize_linear(w, calib, cfg, bias=b)
+
+
+# ---------------------------------------------------------------------------
+# route resolution + config validation
+# ---------------------------------------------------------------------------
+
+def test_kernel_field_validated():
+    with pytest.raises(ValueError, match="kernel"):
+        QLinearConfig(kernel="cuda")
+
+
+def test_resolve_route_passthrough_and_legacy():
+    assert kr.resolve_route("pallas") == "pallas"
+    assert kr.resolve_route("jnp") == "jnp"
+    assert kr.resolve_route("jnp", use_kernel=True) == "jnp"  # explicit wins
+    assert kr.resolve_route("auto", use_kernel=True) == "pallas"  # legacy opt-in
+    with pytest.raises(ValueError):
+        kr.resolve_route("bogus")
+
+
+def test_auto_route_env_override(monkeypatch):
+    monkeypatch.setattr(kr, "_AUTO_DEFAULT", None)
+    monkeypatch.setenv("REPRO_LUT_KERNEL", "1")
+    assert kr.resolve_route("auto") == "pallas"
+    monkeypatch.setattr(kr, "_AUTO_DEFAULT", None)
+    monkeypatch.setenv("REPRO_LUT_KERNEL", "off")
+    assert kr.resolve_route("auto") == "jnp"
+    monkeypatch.setattr(kr, "_AUTO_DEFAULT", None)
+    monkeypatch.setenv("REPRO_LUT_KERNEL", "auto")
+    want = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert kr.resolve_route("auto") == want
+
+
+def test_quantspec_kernel_rule_and_json_roundtrip():
+    spec = QuantSpec(base=QLinearConfig(detection="none"),
+                     rules=[("mlp/*", {"kernel": "pallas"})])
+    assert spec.resolve("blocks/mlp/wi").kernel == "pallas"
+    assert spec.resolve("blocks/attn/wq").kernel == "auto"
+    spec2 = QuantSpec.from_json_dict(spec.to_json_dict())
+    assert spec2 == spec
+    # pre-routing artifacts (no "kernel" key in the stored config) load with
+    # the auto default rather than failing
+    d = spec.to_json_dict()
+    d["base"].pop("kernel")
+    assert QuantSpec.from_json_dict(d).base.kernel == "auto"
+
+
+def test_with_kernel_route_flips_tree():
+    p = _layer(QLinearConfig(detection="none"))
+    tree = {"a": p, "b": [p, jnp.ones(3)]}
+    out = with_kernel_route(tree, "pallas")
+    assert out["a"].cfg.kernel == "pallas"
+    assert out["b"][0].cfg.kernel == "pallas"
+    assert p.cfg.kernel == "auto"  # original untouched
+    np.testing.assert_array_equal(out["b"][1], tree["b"][1])
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting + explicit fallback
+# ---------------------------------------------------------------------------
+
+def test_dispatch_counters_record_routes():
+    p = _layer(QLinearConfig(detection="dynamic"))
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 128))
+    kr.reset()
+    qlinear_apply(with_kernel_route(p, "jnp"), x)
+    qlinear_apply(with_kernel_route(p, "pallas"), x)
+    counts = kr.dispatch_counts()
+    assert counts["w4a4/jnp"] == 1
+    assert counts["w4a4/pallas"] == 1
+    assert kr.kernel_calls() == 1 and kr.jnp_calls() == 1
+    snap = kr.snapshot()
+    assert snap["_kernel_calls"] == 1 and snap["_fallbacks"] == 0
+
+
+def test_w8_activation_fallback_is_explicit():
+    """a_bits > 4 on a requested pallas route: warned once, counted, and the
+    result is exactly the jnp route's (the pre-routing code fell back
+    silently)."""
+    cfg = QLinearConfig(a_bits=5, detection="dynamic", kernel="pallas")
+    p = _layer(cfg, seed=9)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 128))
+    kr.reset()
+    kr._WARNED.clear()
+    before = kr.fallback_count()
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        y = qlinear_apply(p, x)
+    assert kr.fallback_count() == before + 1
+    y_jnp = qlinear_apply(with_kernel_route(p, "jnp"), x)
+    np.testing.assert_array_equal(y, y_jnp)  # same path -> bit-equal
+    # second apply: counted again, but no warning spam
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        qlinear_apply(p, x)
+    assert kr.fallback_count() == before + 2
+
+
+# ---------------------------------------------------------------------------
+# pallas vs jnp parity through the full dual-branch layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("detection", ["none", "dynamic", "static", "static_dense"])
+@pytest.mark.parametrize("w_bits", [4, 8])
+def test_qlinear_parity_pallas_vs_jnp(detection, w_bits):
+    cfg = QLinearConfig(w_bits=w_bits, detection=detection, outlier_frac=0.01)
+    p = _layer(cfg, k=192, n=64, seed=w_bits * 10 + len(detection))
+    x = jax.random.normal(jax.random.PRNGKey(7), (5, 192)) * 2
+    y_jnp = qlinear_apply(with_kernel_route(p, "jnp"), x)
+    y_pal = qlinear_apply(with_kernel_route(p, "pallas"), x)
+    np.testing.assert_allclose(y_pal, y_jnp, rtol=2e-5, atol=1e-4)
+
+
+def test_qlinear_parity_w3_draft_tier():
+    """The speculative draft's W3A4 tier through the kernel route."""
+    cfg = QLinearConfig(w_bits=3, detection="none")
+    p = _layer(cfg, k=128, n=32, seed=5)
+    x = jax.random.normal(jax.random.PRNGKey(8), (3, 128))
+    np.testing.assert_allclose(
+        qlinear_apply(with_kernel_route(p, "pallas"), x),
+        qlinear_apply(with_kernel_route(p, "jnp"), x),
+        rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block autotune
+# ---------------------------------------------------------------------------
+
+def test_autotune_lut_blocks_caches_winner():
+    from repro.kernels import ops
+    from repro.core.quantize import fit_activation_codebook, quantize_weight
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    qw = quantize_weight(jax.random.normal(jax.random.PRNGKey(1), (128, 32)), 4)
+    book = fit_activation_codebook(x, 4)
+    cands = ((8, 32, 64), (8, 32, 128))
+    best = ops.autotune_lut_blocks(x, book, qw, candidates=cands, reps=1)
+    assert best in cands
+    hit = ops._cached_blocks(8, 128, 32, 4, 4, True)
+    assert (hit["block_m"], hit["block_n"], hit["block_k"]) == best
+    # the cached blocks produce the same result as the defaults
+    y = ops.lut_gemm_fused(x, book, qw)
+    np.testing.assert_allclose(y, ops.lut_gemm_fused(x, book, qw, blocks=best),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# serving token identity: kernel route on vs off (speculation + prefix on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serving_token_identity_across_routes():
+    from repro.configs.base import get_smoke_config
+    from repro.models.model import build, quantize_model
+    from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving.speculative import DEFAULT_DRAFT_SPEC, SpeculativeConfig
+
+    cfg = get_smoke_config("llama3_2_1b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qp = quantize_model(model, params,
+                        QuantSpec(base=QLinearConfig(detection="none")))
+    dqp = quantize_model(model, params, DEFAULT_DRAFT_SPEC)
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8], [9, 8, 7], [1, 2, 3, 4, 5, 6, 20, 21]]
+
+    def serve(route):
+        eng = ServingEngine(
+            model, with_kernel_route(qp, route),
+            ServeConfig(cache_len=64, cache_dtype="float32", block_size=8,
+                        prefill_chunk=4, prefix_cache=True,
+                        speculative=SpeculativeConfig(k=2)),
+            batch_slots=3,
+            draft=(model, with_kernel_route(dqp, route), DEFAULT_DRAFT_SPEC))
+        out = eng.generate(prompts, max_new_tokens=6)
+        return out, eng.stats
+
+    kr.reset()
+    out_jnp, _ = serve("jnp")
+    out_pal, stats = serve("pallas")
+    assert out_jnp == out_pal
+    assert stats["lut_kernel_calls"] > 0  # the engine really took the kernel
+    assert stats["lut_fallbacks"] == 0
