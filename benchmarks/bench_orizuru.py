@@ -1,17 +1,42 @@
 """Orizuru engine benchmark (paper §IV-D + the 1.5N + 2k*log2N claim).
 
-Comparison-count accounting vs the SpAtten-style 6N baseline, plus kernel
-wall-time of the Pallas Orizuru (interpret mode — correctness-grade timing on
-CPU; real timing is a TPU run) against jax.lax.top_k."""
+Three phases:
+
+1. Comparison-count accounting vs the SpAtten-style 6N baseline (the
+   paper's analytical claim — asserted).
+2. Measured routed-kernel-vs-``lax.top_k`` wall time at decode and prefill
+   shapes, with the sort-based counting oracle asserted EXACTLY on every
+   shape first (interpret mode on CPU — correctness-grade timing; real
+   timing is a TPU run, same as ``bench_lut_config``'s measured phase).
+3. The streaming form: one-pass quantize+detect
+   (``kernels/ops.quantize_outlier_streaming``) vs the two-pass
+   ``quantize_activation`` + ``lax.top_k`` chain, bit-identity asserted on
+   indices, scales, and outlier values.
+
+Standalone (``python -m benchmarks.bench_orizuru``) writes
+``BENCH_bench_orizuru.json`` exactly like a ``benchmarks.run`` invocation,
+so CI can upload the records as an artifact.
+"""
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, record, timed
+from repro.core import outlier as ol
 from repro.core.outlier import naive_topk_comparisons, orizuru_comparisons
+from repro.core.quantize import quantize_activation
+from repro.kernels import ops as kops
+from repro.kernels.ref import topk_outlier_ref
 from repro.kernels.topk_outlier import topk_outlier_kernel_call
+
+# (label, M, N) — decode: a packed token-budget step's worth of rows over a
+# model-dim-wide activation; prefill: a chunk of rows. k is the paper's
+# ~0.5%-per-side budget (floored at 1 by num_outliers).
+SHAPES = (("decode", 8, 2048), ("prefill", 128, 1024))
 
 
 def run() -> None:
@@ -22,14 +47,62 @@ def run() -> None:
         o, s = orizuru_comparisons(n, k), naive_topk_comparisons(n)
         print(f"{n},{k},{o},{s},{s/o:.2f}")
         assert o < s
+        record(f"orizuru_comparisons_n{n}", n=n, k=k, orizuru=o, naive_6n=s,
+               ratio=round(s / o, 2))
     emit("orizuru_comparisons_4096", 0.0,
          f"{orizuru_comparisons(4096, 20)} vs 6N={naive_topk_comparisons(4096)}")
 
-    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
-    us_kernel = timed(lambda a: topk_outlier_kernel_call(a, 20, block_m=8)[0], x, reps=2)
-    us_lax = timed(lambda a: jax.lax.top_k(a, 20)[0], x, reps=2)
-    emit("orizuru_kernel_interpret_us", us_kernel, f"lax_top_k_us={us_lax:.0f} (CPU interpret)")
+    # ---- measured: routed kernel vs lax.top_k, oracle asserted -------------
+    interpret = jax.default_backend() != "tpu"
+    print("shape,M,N,k,kernel_us,lax_top_k_us")
+    for label, m, n in SHAPES:
+        k = ol.num_outliers(n, 0.005)
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+        got = topk_outlier_kernel_call(x, k)
+        want = topk_outlier_ref(x, k)
+        for g, w in zip(got, want):
+            assert jnp.array_equal(g, w), f"{label}: kernel != counting oracle"
+        us_kernel = timed(lambda a: topk_outlier_kernel_call(a, k)[0], x, reps=2)
+        us_lax = timed(lambda a: jax.lax.top_k(a, k)[0], x, reps=2)
+        print(f"{label},{m},{n},{k},{us_kernel:.0f},{us_lax:.0f}")
+        record(f"orizuru_kernel_{label}", m=m, n=n, k=k,
+               kernel_us=round(us_kernel, 1), lax_top_k_us=round(us_lax, 1),
+               oracle_exact=True, interpret=interpret)
+    emit("orizuru_kernel_interpret_us", us_kernel,
+         f"lax_top_k_us={us_lax:.0f} ({'CPU interpret' if interpret else 'TPU'})")
+
+    # ---- streaming: one-pass quantize+detect vs the two-pass chain ---------
+    m, n, k = 8, 2048, ol.num_outliers(2048, 0.005)
+    book = jnp.sort(jax.random.normal(jax.random.PRNGKey(1), (16,)))
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, n))
+    qa, outs = kops.quantize_outlier_streaming(x, book, k)
+    qa_ref = quantize_activation(x, book)
+    det_ref = ol.detect_outliers_topk(x.astype(jnp.float32), k)
+    assert jnp.array_equal(qa.idx, qa_ref.idx), "streaming idx != quantize_activation"
+    assert jnp.array_equal(qa.scale, qa_ref.scale)
+    assert jnp.array_equal(outs.values, det_ref.values)
+    assert jnp.array_equal(outs.channels, det_ref.channels)
+    us_stream = timed(
+        lambda a: kops.quantize_outlier_streaming(a, book, k)[0].idx, x, reps=2)
+    us_twopass = timed(
+        lambda a: (quantize_activation(a, book).idx,
+                   ol.detect_outliers_topk(a.astype(jnp.float32), k))[0],
+        x, reps=2)
+    print(f"streaming,{m},{n},{k},{us_stream:.0f},{us_twopass:.0f}")
+    record("orizuru_streaming", m=m, n=n, k=k,
+           streaming_us=round(us_stream, 1), two_pass_us=round(us_twopass, 1),
+           bit_identical=True, interpret=interpret)
+    emit("orizuru_streaming_us", us_stream,
+         f"two_pass_us={us_twopass:.0f} bit-identical idx/scale/outliers")
 
 
 if __name__ == "__main__":
+    # Standalone entry writes the same BENCH json run.py would (the other
+    # __main__ benches do; this one only printed before).
+    from benchmarks import common
+    from benchmarks.run import _write_result
+
+    _t0 = time.time()
     run()
+    _write_result("bench_orizuru", True, time.time() - _t0,
+                  list(common.RECORDS))

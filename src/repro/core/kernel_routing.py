@@ -1,4 +1,4 @@
-"""LUT-GEMM kernel routing policy + per-tier dispatch accounting.
+"""Kernel routing policy + per-tier dispatch accounting (LUT-GEMM + Orizuru).
 
 Every quantized projection resolves a route — ``pallas`` (the fused
 quantize+index-GEMM Pallas kernel, ``repro/kernels/lut_gemm.py``) or ``jnp``
@@ -13,15 +13,26 @@ quantize+index-GEMM Pallas kernel, ``repro/kernels/lut_gemm.py``) or ``jnp``
   pallas : always the kernel (interpret mode off-TPU).
   jnp    : always the factorized jnp form.
 
+**Outlier detection routes the same way** (``QLinearConfig.detect_kernel``):
+the dual-branch layer's ``detection="dynamic"`` top-k/bottom-k resolves to
+the Pallas Orizuru tournament kernel (``repro/kernels/topk_outlier.py`` —
+on the jnp GEMM route as the STREAMING variant that emits (idx, scale,
+OutlierSet) in the quantize pass) or to ``jax.lax.top_k``. The
+``REPRO_TOPK_KERNEL`` env var overrides the auto default, mirroring
+``REPRO_LUT_KERNEL``. Static (OASIS-S) detection is threshold scoring with
+no tournament to run — it always resolves to jnp; requesting
+``detect_kernel="pallas"`` for it is an explicit, warned fallback.
+
 Route resolution happens at **trace time** (``qlinear_apply`` runs under
-jit), so the dispatch counters here record which GEMM path was *compiled
+jit), so the dispatch counters here record which path was *compiled
 into* each jaxpr — one count per projection per traced shape, not per
 executed step. That is exactly the observability question ("which path
 actually ran?") a trace-time decision can answer truthfully; incrementing
 per execution would need a host callback on the serving hot path. The
 serving scheduler surfaces these counts as lazy gauges in the PR-6
-telemetry registry (``serving_lut_kernel_calls`` / ``serving_lut_jnp_calls``
-/ ``serving_lut_fallbacks``) and in ``ServingEngine.stats``.
+telemetry registry (``serving_lut_*`` and ``serving_outlier_*``) and in
+``ServingEngine.stats``. Compensation-route choices (gather vs scatter,
+``QLinearConfig.comp_mode`` resolution) are counted here too.
 
 Fallbacks are never silent: an unsupported tier demoted from a requested
 ``pallas`` route increments a counter AND warns once per reason
@@ -39,12 +50,22 @@ import jax
 
 __all__ = [
     "resolve_route",
+    "resolve_detect_route",
     "record_dispatch",
     "record_fallback",
+    "record_detect_dispatch",
+    "record_detect_fallback",
+    "record_comp_route",
     "dispatch_counts",
     "kernel_calls",
     "jnp_calls",
     "fallback_count",
+    "detect_dispatch_counts",
+    "detect_calls",
+    "detect_kernel_calls",
+    "detect_jnp_calls",
+    "detect_fallback_count",
+    "comp_route_counts",
     "snapshot",
     "reset",
 ]
@@ -59,10 +80,18 @@ _DISPATCH: Counter = Counter()
 _FALLBACKS: Counter = Counter()
 _WARNED: set[str] = set()
 
+# Outlier-detection routing state, mirroring the GEMM counters above:
+# (tier, route) dispatches, explicit fallbacks, and the comp-route choice
+# (gather vs scatter) that the dual branch resolves per trace.
+_DETECT_DISPATCH: Counter = Counter()
+_DETECT_FALLBACKS: Counter = Counter()
+_COMP_ROUTES: Counter = Counter()
+
 # Resolved on first use, NOT at import: jax.default_backend() initializes
 # the backend, which would break platform overrides in programs that merely
 # import the core stack. Tests monkeypatch this to force a route.
 _AUTO_DEFAULT: bool | None = None
+_DETECT_AUTO_DEFAULT: bool | None = None
 
 
 def _auto_default() -> bool:
@@ -94,6 +123,32 @@ def resolve_route(kernel: str, use_kernel: bool = False) -> str:
     return "pallas" if _auto_default() else "jnp"
 
 
+def _detect_auto_default() -> bool:
+    """auto detect-route default: Orizuru kernel on TPU, lax.top_k elsewhere;
+    overridable via ``REPRO_TOPK_KERNEL`` ("0"/"off"/"false" forces jnp)."""
+    global _DETECT_AUTO_DEFAULT
+    if _DETECT_AUTO_DEFAULT is None:
+        env = os.environ.get("REPRO_TOPK_KERNEL", "auto").strip().lower()
+        if env in ("", "auto"):
+            _DETECT_AUTO_DEFAULT = jax.default_backend() == "tpu"
+        else:
+            _DETECT_AUTO_DEFAULT = env not in ("0", "off", "false")
+    return _DETECT_AUTO_DEFAULT
+
+
+def resolve_detect_route(detect_kernel: str) -> str:
+    """Resolve a ``QLinearConfig.detect_kernel`` policy to a concrete route."""
+    if detect_kernel == "pallas":
+        return "pallas"
+    if detect_kernel == "jnp":
+        return "jnp"
+    if detect_kernel != "auto":
+        raise ValueError(
+            f"detect_kernel must be one of {ROUTES}, got {detect_kernel!r}"
+        )
+    return "pallas" if _detect_auto_default() else "jnp"
+
+
 def record_dispatch(tier: str, route: str) -> None:
     _DISPATCH[(tier, route)] += 1
 
@@ -110,6 +165,30 @@ def record_fallback(tier: str, reason: str) -> None:
             RuntimeWarning,
             stacklevel=3,
         )
+
+
+def record_detect_dispatch(tier: str, route: str) -> None:
+    _DETECT_DISPATCH[(tier, route)] += 1
+
+
+def record_detect_fallback(tier: str, reason: str) -> None:
+    """Explicit detect pallas->jnp demotion: counted, warned once per reason."""
+    _DETECT_FALLBACKS[reason] += 1
+    _DETECT_DISPATCH[(tier, "fallback")] += 1
+    key = f"detect:{reason}"
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(
+            f"Orizuru detection kernel route unavailable for tier {tier}: "
+            f"{reason}; falling back to the jnp (lax.top_k / threshold) path",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def record_comp_route(mode: str) -> None:
+    """Count the resolved compensation route ("gather" or "scatter")."""
+    _COMP_ROUTES[mode] += 1
 
 
 def dispatch_counts() -> dict[str, int]:
@@ -130,12 +209,52 @@ def fallback_count() -> int:
     return sum(_FALLBACKS.values())
 
 
+def detect_dispatch_counts() -> dict[str, int]:
+    """``{"<tier>/<route>": count}`` snapshot of detection dispatches."""
+    return {
+        f"{tier}/{route}": n
+        for (tier, route), n in sorted(_DETECT_DISPATCH.items())
+    }
+
+
+def detect_calls() -> int:
+    """Total outlier-branch detection resolutions (any route, incl. fallback
+    demotions — every one of these compiled *some* detection into the jaxpr)."""
+    return sum(_DETECT_DISPATCH.values())
+
+
+def detect_kernel_calls() -> int:
+    """Detections routed to the Pallas Orizuru kernel (trace-time count)."""
+    return sum(n for (_, route), n in _DETECT_DISPATCH.items() if route == "pallas")
+
+
+def detect_jnp_calls() -> int:
+    return sum(n for (_, route), n in _DETECT_DISPATCH.items() if route == "jnp")
+
+
+def detect_fallback_count() -> int:
+    return sum(_DETECT_FALLBACKS.values())
+
+
+def comp_route_counts() -> dict[str, int]:
+    """``{"gather": n, "scatter": m}`` resolved compensation routes."""
+    return dict(sorted(_COMP_ROUTES.items()))
+
+
 def snapshot() -> dict[str, int]:
     """Flat copy for delta-based assertions (benchmarks, tests)."""
     d = dispatch_counts()
+    for key, n in detect_dispatch_counts().items():
+        d[f"detect:{key}"] = n
+    for mode, n in comp_route_counts().items():
+        d[f"comp:{mode}"] = n
     d["_kernel_calls"] = kernel_calls()
     d["_jnp_calls"] = jnp_calls()
     d["_fallbacks"] = fallback_count()
+    d["_detect_calls"] = detect_calls()
+    d["_detect_kernel_calls"] = detect_kernel_calls()
+    d["_detect_jnp_calls"] = detect_jnp_calls()
+    d["_detect_fallbacks"] = detect_fallback_count()
     return d
 
 
@@ -144,3 +263,6 @@ def reset() -> None:
     spam does not become useful again just because counters were zeroed."""
     _DISPATCH.clear()
     _FALLBACKS.clear()
+    _DETECT_DISPATCH.clear()
+    _DETECT_FALLBACKS.clear()
+    _COMP_ROUTES.clear()

@@ -14,6 +14,18 @@ Both routes are exact vs the counting-form oracle and token-identical to
 each other under greedy serving (index selection is bit-equal; see
 ``kernels/ops.lut_gemm_fused``). Fallbacks off a requested pallas route are
 explicit — counted in the dispatch registry and warned once — never silent.
+
+The outlier branch routes independently (``detect_kernel``): dynamic (OASIS)
+detection runs the Pallas Orizuru tournament kernel or ``lax.top_k``. On the
+jnp GEMM route with Pallas detection the layer uses the STREAMING form —
+bucketize + dual top-k in one pass over the activation tile
+(``kernels/ops.quantize_outlier_streaming``) — so detection adds no extra
+HBM roundtrip; on the fused GEMM route the detection-only kernel composes
+via ``outlier_residuals_direct`` (q(x) recomputed at the 2k gathered
+channels, indices never materialized). All four combinations are bit-
+identical in their index/value selection, so greedy serving tokens match
+across routes. The A3 activation tier (8-entry codebook) is legal only with
+``detection != "none"`` (see ``QLinearConfig.validate``).
 """
 
 from __future__ import annotations
@@ -37,6 +49,7 @@ __all__ = [
     "quantize_linear",
     "qlinear_apply",
     "with_kernel_route",
+    "with_detect_route",
 ]
 
 Detection = Literal["dynamic", "static", "static_dense", "none"]
@@ -62,11 +75,45 @@ class QLinearConfig:
     # auto = Pallas on TPU / jnp factorized on CPU (REPRO_LUT_KERNEL env
     # overrides the auto default, mirroring REPRO_PAGED_KERNEL)
     kernel: KernelRoute = "auto"
+    # outlier-detection routing policy (kernel_routing.resolve_detect_route):
+    # dynamic detection resolves to the Pallas Orizuru tournament kernel or
+    # lax.top_k; independent of the GEMM route so they flip separately.
+    # REPRO_TOPK_KERNEL env overrides the auto default.
+    detect_kernel: KernelRoute = "auto"
 
     def __post_init__(self):
         if self.kernel not in kr.ROUTES:
             raise ValueError(
                 f"kernel must be one of {kr.ROUTES}, got {self.kernel!r}")
+        if self.detect_kernel not in kr.ROUTES:
+            raise ValueError(
+                f"detect_kernel must be one of {kr.ROUTES}, "
+                f"got {self.detect_kernel!r}")
+        if not 2 <= self.w_bits <= 8:
+            raise ValueError(f"w_bits must be in [2, 8], got {self.w_bits}")
+        if not 3 <= self.a_bits <= 8:
+            raise ValueError(f"a_bits must be in [3, 8], got {self.a_bits}")
+
+    def validate(self) -> "QLinearConfig":
+        """Cross-field legality, checked where a config is *applied* (QuantSpec
+        resolution, quantize_linear, explicit qlinear_apply overrides) — not in
+        ``__post_init__``, so per-rule ``dataclasses.replace`` chains may pass
+        through transiently-illegal states.
+
+        The A3 activation tier (8-entry K-Means codebook) is only legal with
+        online outlier compensation: sub-4-bit codebooks have no headroom for
+        the tails, so the outlier branch must carry them (KVQuant's sub-1%-
+        outlier argument). The ``uniform`` (RTN/INT-WAQ) grid is exempt — it
+        is the deliberate collapse baseline of the Table III analog, not the
+        K-Means A3 tier.
+        """
+        if self.a_bits < 4 and self.detection == "none" and self.method == "kmeans":
+            raise ValueError(
+                f"a_bits={self.a_bits} (the A3 K-Means tier) requires online "
+                "outlier compensation: set detection to 'dynamic', 'static', "
+                "or 'static_dense' (A3 is only legal with detection != 'none')"
+            )
+        return self
 
 
 @partial(
@@ -106,6 +153,7 @@ def quantize_linear(
     this layer (paper: 16 C4 samples). ``fisher``: optional per-element
     Fisher-information weights for weighted K-Means.
     """
+    cfg.validate()
     qw = qz.quantize_weight(w, nbits=cfg.w_bits, method=cfg.method)
     book = qz.fit_activation_codebook(
         calib_acts, nbits=cfg.a_bits, fisher=fisher, scale_mode=cfg.scale_mode,
@@ -133,6 +181,21 @@ def with_kernel_route(params, kernel: KernelRoute):
         swap, params, is_leaf=lambda p: isinstance(p, QLinearParams))
 
 
+def with_detect_route(params, detect_kernel: KernelRoute):
+    """Like :func:`with_kernel_route`, for the outlier-detection route: swap
+    ``detect_kernel`` across a (tree of) QLinearParams without re-quantizing,
+    so detection routes stay bit-comparable (the streaming/detection kernels
+    are index- and value-identical to the lax.top_k path)."""
+    def swap(p):
+        if isinstance(p, QLinearParams):
+            return dataclasses.replace(
+                p, cfg=dataclasses.replace(p.cfg, detect_kernel=detect_kernel))
+        return p
+
+    return jax.tree_util.tree_map(
+        swap, params, is_leaf=lambda p: isinstance(p, QLinearParams))
+
+
 def _tokens(x: jax.Array) -> int:
     return math.prod(x.shape[:-1]) if x.ndim > 1 else 1
 
@@ -145,7 +208,7 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
     ablation (quantize-time artifacts — codebook size, static thresholds —
     obviously cannot be changed after the fact).
     """
-    cfg = p.cfg if cfg is None else cfg
+    cfg = p.cfg if cfg is None else cfg.validate()
     out_dtype = x.dtype
     a_nbits = int(p.act_codebook.shape[0]).bit_length() - 1
     tier = f"w{p.qw.nbits}a{a_nbits}"
@@ -162,8 +225,31 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
         route = "jnp"
     kr.record_dispatch(tier, route)
 
+    # ---- outlier detection routing (resolved BEFORE the main branch: the
+    # streaming kernel fuses detection into the activation-quantize pass) ----
+    detect_route = None
+    k_out = 0
+    if cfg.detection != "none" and cfg.outlier_frac > 0:
+        k_out = ol.num_outliers(x.shape[-1], cfg.outlier_frac)
+        if cfg.detection == "dynamic":
+            detect_route = kr.resolve_detect_route(cfg.detect_kernel)
+            kr.record_detect_dispatch(tier, detect_route)
+        else:
+            # static/static_dense score against offline thresholds — there is
+            # no top-k tournament to run, so a requested Orizuru route is an
+            # EXPLICIT demotion; auto resolves to jnp quietly.
+            detect_route = "jnp"
+            if cfg.detect_kernel == "pallas":
+                kr.record_detect_fallback(
+                    tier, f"detection={cfg.detection!r} scores against static "
+                          "thresholds (no top-k tournament); only 'dynamic' "
+                          "routes to the Orizuru kernel")
+            else:
+                kr.record_detect_dispatch(tier, "jnp")
+
     # ---- main branch: look-ahead LUT-GEMM over ALL activations ------------
     qa = None
+    outs = None
     if route == "pallas":
         from repro.kernels import ops as kops
 
@@ -174,7 +260,17 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
                                 scale_mode=cfg.scale_mode,
                                 out_dtype=cfg.compute_dtype)
     else:
-        qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
+        if (detect_route == "pallas" and cfg.detection == "dynamic"
+                and a_nbits <= 4):
+            from repro.kernels import ops as kops
+
+            # streaming Orizuru: bucketize + dual top-k in ONE pass over the
+            # activation tile — detection adds no extra HBM roundtrip. Bit-
+            # identical to quantize_activation + lax.top_k (kernel contract).
+            qa, outs = kops.quantize_outlier_streaming(
+                x, p.act_codebook, k_out, cfg.scale_mode)
+        else:
+            qa = qz.quantize_activation(x, p.act_codebook, cfg.scale_mode)
         y = _lut_gemm_jnp(qa, p.qw, out_dtype=cfg.compute_dtype,
                           compute_dtype=cfg.compute_dtype)
 
@@ -198,13 +294,21 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
         w = (p.qw.codebook[p.qw.indices] * p.qw.scale[None, :]).astype(cfg.compute_dtype)
         y = y + jnp.einsum("...k,kn->...n", r, w)
     elif cfg.detection != "none" and cfg.outlier_frac > 0:
-        k = ol.num_outliers(x.shape[-1], cfg.outlier_frac)
-        if cfg.detection == "dynamic":
-            outs = ol.detect_outliers_topk(x.astype(jnp.float32), k)
-        else:
-            outs = ol.detect_outliers_static(
-                x.astype(jnp.float32), p.thr_lo, p.thr_hi, k
-            )
+        if outs is None:
+            if cfg.detection == "dynamic" and detect_route == "pallas":
+                from repro.kernels import ops as kops
+
+                # detection-only Orizuru kernel: the fused-GEMM main branch
+                # (qa is None) composes via outlier_residuals_direct below;
+                # a_bits > 4 on the jnp route lands here too (the streaming
+                # form's compare chain, like fused bucketize, tops out at A4)
+                outs = kops.topk_outlier(x.astype(jnp.float32), k_out)
+            elif cfg.detection == "dynamic":
+                outs = ol.detect_outliers_topk(x.astype(jnp.float32), k_out)
+            else:
+                outs = ol.detect_outliers_static(
+                    x.astype(jnp.float32), p.thr_lo, p.thr_hi, k_out
+                )
         if qa is None:
             # kernel route: q(x) at the 2k outlier channels, recomputed from
             # the gathered values (quantization is elementwise) — bit-equal
@@ -218,6 +322,7 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
         if mode == "auto":
             # decode-ish (few tokens): row-gather; prefill-ish: scatter+dense GEMM
             mode = "gather" if _tokens(x) <= cfg.comp_auto_tokens else "scatter"
+        kr.record_comp_route(mode)
         comp = (
             ol.compensate_gather(r, outs, p.qw, cfg.compute_dtype)
             if mode == "gather"

@@ -30,7 +30,13 @@ GEMM kernel routing IS a per-layer rule: ``kernel`` ("auto" | "pallas" |
 ``rules=[("mlp/*", {"kernel": "pallas"})]`` routes just the MLP projections
 through the fused Pallas quantize+index-GEMM while attention stays on the
 jnp factorized form (see ``repro.core.kernel_routing`` for the auto
-semantics and the dispatch counters).
+semantics and the dispatch counters). The same goes for outlier handling:
+``detection`` / ``outlier_frac`` / ``detect_kernel`` are rule-addressable,
+so ``rules=[("mlp/*", {"a_bits": 3, "detection": "dynamic"})]`` drops just
+the MLP activations to the A3 tier with online Orizuru compensation.
+Resolution validates the final per-layer config (``QLinearConfig.validate``)
+— an A3 rule without online detection is rejected at resolve time, not at
+some later trace.
 
 Scan-stacked models (``cfg.scan_layers=True``) share one path per projection
 (``blocks/attn/wq`` covers every layer in the stack), so per-layer-index
@@ -135,7 +141,10 @@ class QuantSpec:
             else:
                 skip = False
                 cfg = dataclasses.replace(cfg, **dict(rule.overrides))
-        return None if skip else cfg
+        # cross-field legality (e.g. the A3 tier requires detection != none)
+        # is checked HERE, on the final per-layer state: intermediate rule
+        # applications may pass through transiently-illegal combinations.
+        return None if skip else cfg.validate()
 
     # ---------------------------------------------------------- serialization
     def to_json_dict(self) -> dict:

@@ -27,10 +27,14 @@ from repro.core.outlier import OutlierSet
 from repro.core.quantize import QuantizedActivation, QuantizedWeight, token_scale
 from repro.kernels.bucketize import bucketize_kernel_call
 from repro.kernels.lut_gemm import fused_lut_gemm_kernel_call, lut_gemm_kernel_call
-from repro.kernels.topk_outlier import topk_outlier_kernel_call
+from repro.kernels.topk_outlier import (
+    streaming_quantize_outlier_kernel_call,
+    topk_outlier_kernel_call,
+)
 
 __all__ = ["lut_gemm", "lut_gemm_fused", "bucketize", "topk_outlier",
-           "should_interpret", "autotune_lut_blocks"]
+           "quantize_outlier_streaming", "should_interpret",
+           "autotune_lut_blocks"]
 
 
 def should_interpret() -> bool:
@@ -199,3 +203,37 @@ def topk_outlier(x: jax.Array, k: int) -> OutlierSet:
     values = jnp.concatenate([hi_v, lo_v], axis=-1).reshape(*lead, 2 * k)
     channels = jnp.concatenate([hi_i, lo_i], axis=-1).reshape(*lead, 2 * k)
     return OutlierSet(values=values, channels=channels, mask=jnp.ones_like(values))
+
+
+@partial(jax.jit, static_argnames=("k", "scale_mode"))
+def quantize_outlier_streaming(
+    x: jax.Array, codebook: jax.Array, k: int, scale_mode: str = "rms"
+) -> tuple[QuantizedActivation, OutlierSet]:
+    """One-pass activation quantize + Orizuru detect (the streaming form).
+
+    Emits the SAME ``QuantizedActivation`` as ``quantize_activation`` (bit-
+    identical indices and scale for either input dtype) and the SAME
+    ``OutlierSet`` as ``topk_outlier`` on the f32 activations — but reads the
+    activation tile once, so dynamic detection adds no extra HBM roundtrip
+    at decode shapes.
+    """
+    x2d, lead = _flatten_leading(x)
+    s = token_scale(x2d, scale_mode)  # (M, 1) f32
+    book = codebook.astype(jnp.float32)
+    mul_form = x.dtype == jnp.bfloat16
+    idx, hi_v, hi_i, lo_v, lo_i = streaming_quantize_outlier_kernel_call(
+        x2d.astype(jnp.float32), s, boundaries_from_centroids(book), k,
+        mul_form=mul_form, interpret=should_interpret(),
+    )
+    if mul_form:
+        idx = idx.astype(jnp.int8)  # quantize_activation's bf16 index dtype
+    nbits = int(codebook.shape[0]).bit_length() - 1
+    qa = QuantizedActivation(
+        idx=idx.reshape(*lead, x.shape[-1]),
+        scale=s.reshape(*lead, 1), codebook=codebook, nbits=nbits,
+    )
+    values = jnp.concatenate([hi_v, lo_v], axis=-1).reshape(*lead, 2 * k)
+    channels = jnp.concatenate([hi_i, lo_i], axis=-1).reshape(*lead, 2 * k)
+    outs = OutlierSet(values=values, channels=channels,
+                      mask=jnp.ones_like(values))
+    return qa, outs

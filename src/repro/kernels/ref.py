@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["lut_gemm_ref", "lut_gemm_byte_ref", "fused_lut_gemm_ref",
-           "bucketize_ref", "topk_outlier_ref", "paged_attn_ref",
+           "bucketize_ref", "topk_outlier_ref",
+           "streaming_quantize_outlier_ref", "paged_attn_ref",
            "paged_attn_quant_ref"]
 
 _NEG_INF = float(jnp.finfo(jnp.float32).min)
@@ -164,3 +165,24 @@ def topk_outlier_ref(x: jax.Array, k: int):
     hi_v, hi_i = jax.lax.top_k(x, k)
     lo_v, lo_i = jax.lax.top_k(-x, k)
     return hi_v, hi_i.astype(jnp.int32), -lo_v, lo_i.astype(jnp.int32)
+
+
+def streaming_quantize_outlier_ref(
+    x: jax.Array,  # (M, N) raw activations
+    scale: jax.Array,  # (M, 1) f32 per-token scale
+    boundaries: jax.Array,  # (2^n - 1,) f32
+    k: int,
+    *,
+    mul_form: bool = False,
+):
+    """Oracle for the streaming quantize+detect kernel: bucketize (same two
+    forms as ``fused_lut_gemm_ref``) plus the dual top-k on the raw f32
+    activations. Returns (idx, hi_v, hi_i, lo_v, lo_i)."""
+    xf = x.astype(jnp.float32)
+    if mul_form:
+        idx = jnp.sum(
+            xf[..., None] >= scale[..., None] * boundaries, axis=-1
+        ).astype(jnp.int32)
+    else:
+        idx = bucketize_ref(xf / scale, boundaries)
+    return (idx, *topk_outlier_ref(xf, k))

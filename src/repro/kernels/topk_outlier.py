@@ -18,9 +18,20 @@ and the *pair-collapse* structure:
                     vector-lanes of work but only k sequential steps;
   min side:         the SAME pop routine on (-B, -A) — comparisons reused.
 
+Odd N is handled by padding one lane that is −inf on the max side and +inf
+on the min side, so the pad can never be selected while k <= N real values
+remain (indices therefore never point at the pad). On the even path the two
+sides still share one set of pairwise comparisons bit-for-bit.
+
 Tie-breaking matches the paper: the left child wins in both trees, which
 reproduces lax.top_k's ascending-index order on equal values (asserted in
-tests against the sort-based oracle).
+tests against the sort-based oracle, including duplicate-heavy and
+all-equal inputs).
+
+``streaming_quantize_outlier_kernel_call`` is the serving decode form: one
+pass over the (bm, N) tile emits the bucketized activation indices AND the
+per-token outlier set, so dynamic detection adds no extra HBM roundtrip on
+top of activation quantization (the tile is read once).
 """
 
 from __future__ import annotations
@@ -31,9 +42,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["topk_outlier_kernel_call"]
+__all__ = ["topk_outlier_kernel_call", "streaming_quantize_outlier_kernel_call"]
 
 _NEG_INF = float("-inf")  # plain literal: jnp constants would be captured consts in the kernel
+_POS_INF = float("inf")
+
+
+def _default_interpret(interpret: bool | None) -> bool:
+    # mirrors ops.should_interpret(); kept local to avoid a kernels->ops cycle
+    return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
 def _pop_topk(cur, fallback, idx_cur, idx_fb, k: int):
@@ -75,61 +92,173 @@ def _pop_topk(cur, fallback, idx_cur, idx_fb, k: int):
     return vals, idxs
 
 
-def _kernel(x_ref, hi_v_ref, hi_i_ref, lo_v_ref, lo_i_ref, *, k: int):
-    x = x_ref[...]  # (bm, N)
+def _dual_topk(x, k: int, n_valid: int):
+    """Shared-pairwise dual top-k/bottom-k over a (bm, n) f32 tile.
+
+    ``n_valid`` < n means the trailing lanes are padding: they become −inf on
+    the max side and +inf on the min side, so with k <= n_valid and finite
+    real data a pad lane is never popped (its fallback is the sign-flipped
+    pad, i.e. worse than any real value on either side). With n_valid == n
+    both trees read the SAME array and the pairwise comparisons are shared.
+    Returns (hi_v desc, hi_i, lo_v asc, lo_i).
+    """
     bm, n = x.shape
-    xp = x.reshape(bm, n // 2, 2)
-    xe, xo = xp[..., 0], xp[..., 1]
+    if n_valid < n:
+        col = jax.lax.broadcasted_iota(jnp.int32, (bm, n), 1)
+        x_hi = jnp.where(col < n_valid, x, _NEG_INF)
+        x_lo = jnp.where(col < n_valid, x, _POS_INF)
+    else:
+        x_hi = x_lo = x
+
+    pair = jax.lax.broadcasted_iota(jnp.int32, (bm, n // 2), 1) * 2
 
     # --- shared pairwise comparisons (level-1 of both trees): N/2 compares ---
+    xp = x_hi.reshape(bm, n // 2, 2)
+    xe, xo = xp[..., 0], xp[..., 1]
     right_wins_max = xo > xe  # strict: ties go left (paper's rule)
-    right_wins_min = xo < xe
     a = jnp.where(right_wins_max, xo, xe)  # pair maxima
-    b = jnp.where(right_wins_max, xe, xo)  # pair minima
-    pair = jax.lax.broadcasted_iota(jnp.int32, (bm, n // 2), 1) * 2
+    b = jnp.where(right_wins_max, xe, xo)  # pair minima (max-tree fallback)
     # Each tree keeps its own leaf mask (paper: m^(p) vs m^(q)), so primary and
     # fallback indices are complements PER TREE — on a tie both trees pick the
     # left child first and fall back to the right one.
     a_idx = jnp.where(right_wins_max, pair + 1, pair)
     a_fb_idx = jnp.where(right_wins_max, pair, pair + 1)
-    b_idx = jnp.where(right_wins_min, pair + 1, pair)
-    b_fb_idx = jnp.where(right_wins_min, pair, pair + 1)
+
+    xp = x_lo.reshape(bm, n // 2, 2)
+    xe, xo = xp[..., 0], xp[..., 1]
+    right_wins_min = xo < xe
+    c = jnp.where(right_wins_min, xo, xe)  # pair minima
+    d = jnp.where(right_wins_min, xe, xo)  # pair maxima (min-tree fallback)
+    c_idx = jnp.where(right_wins_min, pair + 1, pair)
+    c_fb_idx = jnp.where(right_wins_min, pair, pair + 1)
 
     hi_v, hi_i = _pop_topk(a, b, a_idx, a_fb_idx, k)
-    neg_v, lo_i = _pop_topk(-b, -a, b_idx, b_fb_idx, k)
+    neg_v, lo_i = _pop_topk(-c, -d, c_idx, c_fb_idx, k)
+    return hi_v, hi_i, -neg_v, lo_i
 
+
+def _kernel(x_ref, hi_v_ref, hi_i_ref, lo_v_ref, lo_i_ref, *, k: int,
+            n_valid: int):
+    hi_v, hi_i, lo_v, lo_i = _dual_topk(x_ref[...], k, n_valid)
     hi_v_ref[...] = hi_v
     hi_i_ref[...] = hi_i
-    lo_v_ref[...] = -neg_v
+    lo_v_ref[...] = lo_v
     lo_i_ref[...] = lo_i
 
 
+def _streaming_kernel(x_ref, s_ref, b_ref, idx_ref, hi_v_ref, hi_i_ref,
+                      lo_v_ref, lo_i_ref, *, k: int, n_valid: int,
+                      n_boundaries: int, mul_form: bool):
+    """Bucketize + dual top-k in ONE tile read (the Orizuru streaming form).
+
+    Index selection is bit-identical to ``quantize_activation``: mul_form
+    (bf16 origin) compares x >= s*b_i, f32 form counts (x/s) >= b_i — the
+    same rank searchsorted computes. Detection runs on the raw (unscaled)
+    f32 activations, exactly what the unfused path hands to lax.top_k.
+    """
+    x = x_ref[...]  # (bm, n) f32
+    s = s_ref[...]  # (bm, 1) f32
+    b = b_ref[...]
+    idx = jnp.zeros(x.shape, jnp.int32)
+    if mul_form:
+        for i in range(n_boundaries):
+            idx += (x >= s * b[i]).astype(jnp.int32)
+    else:
+        xd = x / s
+        for i in range(n_boundaries):
+            idx += (xd >= b[i]).astype(jnp.int32)
+    idx_ref[...] = idx
+    hi_v, hi_i, lo_v, lo_i = _dual_topk(x, k, n_valid)
+    hi_v_ref[...] = hi_v
+    hi_i_ref[...] = hi_i
+    lo_v_ref[...] = lo_v
+    lo_i_ref[...] = lo_i
+
+
+def _pad_args(x: jax.Array, k: int, block_m: int):
+    """Shared shape plumbing: pad odd N by one lane and M to a block multiple.
+
+    Returns (x padded f32, bm, grid_m, mp (padded rows), n_valid, np (padded
+    cols)). Pad lanes are zero here; the kernel masks them to ±inf per side.
+    """
+    m, n = x.shape
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} must be in [1, N={n}]")
+    pn = n % 2
+    bm = min(block_m, m)
+    pm = (-m) % bm
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x.astype(jnp.float32), bm, (m + pm) // bm, m + pm, n, n + pn
+
+
 def topk_outlier_kernel_call(
-    x: jax.Array,  # (M, N) f32, N even
+    x: jax.Array,  # (M, N) f32
     k: int,
     *,
     block_m: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Returns (hi_vals desc, hi_idx, lo_vals asc, lo_idx), each (M, k)."""
-    m, n = x.shape
-    if n % 2:
-        raise ValueError("N must be even (pairwise shared comparisons)")
-    if not 1 <= k <= n:
-        raise ValueError(f"k={k} must be in [1, N={n}]")
-    bm = min(block_m, m)
-    pm = (-m) % bm
-    if pm:
-        x = jnp.pad(x, ((0, pm), (0, 0)))
-    gm = (m + pm) // bm
-    shp = jax.ShapeDtypeStruct((m + pm, k), jnp.float32)
-    shpi = jax.ShapeDtypeStruct((m + pm, k), jnp.int32)
+    """Returns (hi_vals desc, hi_idx, lo_vals asc, lo_idx), each (M, k).
+
+    ``interpret=None`` auto-selects interpret mode off-TPU.
+    """
+    m = x.shape[0]
+    x, bm, gm, mp, n_valid, n = _pad_args(x, k, block_m)
+    shp = jax.ShapeDtypeStruct((mp, k), jnp.float32)
+    shpi = jax.ShapeDtypeStruct((mp, k), jnp.int32)
     outs = pl.pallas_call(
-        functools.partial(_kernel, k=k),
+        functools.partial(_kernel, k=k, n_valid=n_valid),
         grid=(gm,),
         in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))] * 4,
         out_shape=[shp, shpi, shp, shpi],
-        interpret=interpret,
-    )(x.astype(jnp.float32))
+        interpret=_default_interpret(interpret),
+    )(x)
     return tuple(o[:m] for o in outs)
+
+
+def streaming_quantize_outlier_kernel_call(
+    x: jax.Array,  # (M, N) f32 raw activations
+    scale: jax.Array,  # (M, 1) f32 per-token scale, computed by the caller
+    boundaries: jax.Array,  # (2^n - 1,) f32 sorted codebook boundaries
+    k: int,
+    *,
+    mul_form: bool = False,
+    block_m: int = 8,
+    interpret: bool | None = None,
+):
+    """Fused quantize + detect: (idx (M, N) i32, hi_v, hi_i, lo_v, lo_i).
+
+    The scale comes IN (same contract as the fused LUT-GEMM kernel) so the
+    per-token scale is bit-identical to ``token_scale`` however it is
+    consumed downstream.
+    """
+    m = x.shape[0]
+    x, bm, gm, mp, n_valid, n = _pad_args(x, k, block_m)
+    if scale.shape != (m, 1):
+        raise ValueError(f"scale must be (M, 1) = ({m}, 1), got {scale.shape}")
+    s = scale.astype(jnp.float32)
+    if mp > m:
+        # pad scales with ones: pad-row divisions stay finite, rows are cut
+        s = jnp.concatenate([s, jnp.ones((mp - m, 1), jnp.float32)])
+    shp = jax.ShapeDtypeStruct((mp, k), jnp.float32)
+    shpi = jax.ShapeDtypeStruct((mp, k), jnp.int32)
+    outs = pl.pallas_call(
+        functools.partial(
+            _streaming_kernel, k=k, n_valid=n_valid,
+            n_boundaries=int(boundaries.shape[0]), mul_form=mul_form,
+        ),
+        grid=(gm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec(boundaries.shape, lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))]
+        + [pl.BlockSpec((bm, k), lambda i: (i, 0))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((mp, n), jnp.int32), shp, shpi, shp, shpi],
+        interpret=_default_interpret(interpret),
+    )(x, s, boundaries.astype(jnp.float32))
+    idx, hi_v, hi_i, lo_v, lo_i = outs
+    return (idx[:m, :n_valid], hi_v[:m], hi_i[:m], lo_v[:m], lo_i[:m])

@@ -267,6 +267,32 @@ class Scheduler:
                 "serving_lut_fallbacks", fn=_kr.fallback_count,
                 help="explicit pallas->jnp tier fallbacks"),
         }
+        # Orizuru outlier-engine dispatch: which detection path each dual-
+        # branch projection compiled into, plus the compensation route
+        # (gather vs scatter) its comp_mode resolved to. Same lazy-gauge
+        # pattern as the LUT-GEMM counters above.
+        self._g_outlier = {
+            "outlier_detect_calls": tel.gauge(
+                "serving_outlier_detect_calls", fn=_kr.detect_calls,
+                help="outlier-branch detection resolutions (any route)"),
+            "outlier_kernel_calls": tel.gauge(
+                "serving_outlier_kernel_calls", fn=_kr.detect_kernel_calls,
+                help="detections routed to the Pallas Orizuru kernel"),
+            "outlier_jnp_calls": tel.gauge(
+                "serving_outlier_jnp_calls", fn=_kr.detect_jnp_calls,
+                help="detections routed to lax.top_k / threshold scoring"),
+            "outlier_fallbacks": tel.gauge(
+                "serving_outlier_fallbacks", fn=_kr.detect_fallback_count,
+                help="explicit detection pallas->jnp demotions"),
+            "outlier_comp_gather": tel.gauge(
+                "serving_outlier_comp_gather",
+                fn=lambda: _kr.comp_route_counts().get("gather", 0),
+                help="compensations resolved to the row-gather route"),
+            "outlier_comp_scatter": tel.gauge(
+                "serving_outlier_comp_scatter",
+                fn=lambda: _kr.comp_route_counts().get("scatter", 0),
+                help="compensations resolved to the scatter+dense route"),
+        }
         self._h_accept = tel.histogram(
             "serving_spec_accepted_per_round",
             linear_buckets(0.0, float(self.spec.k + 1) if self.spec else 1.0,
@@ -289,6 +315,8 @@ class Scheduler:
         d = {k: c.value for k, c in self._c.items()}
         d["peak_occupancy"] = self._g_peak.value
         for k, g in self._g_lut.items():  # trace-time LUT route dispatch
+            d[k] = g.value
+        for k, g in self._g_outlier.items():  # Orizuru detect + comp routes
             d[k] = g.value
         return d
 

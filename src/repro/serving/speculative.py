@@ -61,10 +61,14 @@ __all__ = ["SpeculativeConfig", "DraftRunner", "greedy_verify", "rejection_sampl
 # the projection classes by held-out CE impact under bit-width stress, and
 # mlp/wi tops it (the guarded W3 draft beat both the unguarded and the
 # down-proj-guarded variants there) — plus A4 activations and int4 K-Means
-# draft KV (cheap draft cache state). ~25% smaller weight bytes than W4 and
-# no outlier path on the draft's hot loop.
+# draft KV (cheap draft cache state). ~25% smaller weight bytes than W4.
+# Online Orizuru outlier detection is ON (the serving default since the
+# outlier engine landed): better draft CE means higher acceptance, and the
+# streaming/detection kernel keeps it one pass; greedy verification keeps
+# serving token-identical regardless of draft quality.
 DEFAULT_DRAFT_SPEC = QuantSpec(
-    base=QLinearConfig(w_bits=3, a_bits=4, detection="none"),
+    base=QLinearConfig(w_bits=3, a_bits=4, detection="dynamic",
+                       outlier_frac=0.005),
     rules=[("mlp/wi", {"w_bits": 4})],
     kv_bits=4, kv_dtype="float32",
 )

@@ -45,7 +45,8 @@ def test_rule_precedence_later_wins():
             ("attn/*", {"w_bits": 3}),
             ("attn/wq", {"w_bits": 8, "outlier_frac": 0.02}),
             ("mlp/*", "skip"),
-            ("mlp/wi", {"a_bits": 3}),  # un-skips wi, wd stays dense
+            # un-skips wi, wd stays dense (A3 needs detection != "none")
+            ("mlp/wi", {"a_bits": 3, "detection": "dynamic"}),
         ],
     )
     assert spec.resolve("blocks/attn/wq").w_bits == 8
