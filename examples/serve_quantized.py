@@ -41,10 +41,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true", help="CI: minimal training")
     ap.add_argument("--speculative", action="store_true",
                     help="also serve with a W3 draft artifact + verification")
+    ap.add_argument("--config", default="oasis_7b",
+                    help="smoke config to serve (e.g. oasis_7b, "
+                         "h2o_danube_1_8b, recurrentgemma_2b, falcon_mamba_7b)")
     args = ap.parse_args()
     steps = 30 if args.smoke else args.steps
 
-    cfg = get_smoke_config("oasis_7b")
+    cfg = get_smoke_config(args.config)
     model = build(cfg)
     corpus = ByteCorpus()
     print(f"== warm up the model on repo text ({steps} steps) so decode is non-trivial")

@@ -41,11 +41,16 @@ __all__ = ["paged_attn_kernel_call"]
 _NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
-def _flash_update(s, v, cl, qp, j, bs, m_ref, l_ref, acc_ref, o_ref, last):
+def _flash_update(s, v, cl, qp, j, bs, window, m_ref, l_ref, acc_ref, o_ref,
+                  last):
     """One online-softmax step over a (bs, KV, hd) value block for a whole
-    query segment. s: (KV, G, S, bs) scores; qp: (S,) absolute positions."""
+    query segment. s: (KV, G, S, bs) scores; qp: (S,) absolute positions.
+    ``window > 0`` (static) adds the sliding-window mask term — keys at
+    ``<= qp - window`` are dead, matching the ring cache's ``_mask``."""
     kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
     valid = (kpos < cl) & (kpos <= qp[None, None, :, None])
+    if window > 0:
+        valid &= kpos > qp[None, None, :, None] - window
     s = jnp.where(valid, s, _NEG_INF)
     m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1))
     p = jnp.exp(s - m_new[..., None])  # (KV, G, S, bs)
@@ -71,7 +76,8 @@ def _init_scratch(m_ref, l_ref, acc_ref):
 
 
 def _kernel_bf16(bt_ref, cl_ref, qp_ref, q_ref, k_ref, v_ref, o_ref,
-                 m_ref, l_ref, acc_ref, *, bs: int, max_blk: int, softcap: float):
+                 m_ref, l_ref, acc_ref, *, bs: int, max_blk: int,
+                 softcap: float, window: int):
     _init_scratch(m_ref, l_ref, acc_ref)
     b, j = pl.program_id(0), pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)  # (S, KV, G, hd)
@@ -81,7 +87,7 @@ def _kernel_bf16(bt_ref, cl_ref, qp_ref, q_ref, k_ref, v_ref, o_ref,
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
     _flash_update(s, v_ref[0].astype(jnp.float32), cl_ref[b], qp_ref[0], j, bs,
-                  m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
+                  window, m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
 
 
 def _deq_block(idx, scale, book):
@@ -94,7 +100,7 @@ def _deq_block(idx, scale, book):
 
 def _kernel_quant(bt_ref, cl_ref, qp_ref, q_ref, ki_ref, ks_ref, vi_ref, vs_ref,
                   book_ref, o_ref, m_ref, l_ref, acc_ref,
-                  *, bs: int, max_blk: int, softcap: float):
+                  *, bs: int, max_blk: int, softcap: float, window: int):
     _init_scratch(m_ref, l_ref, acc_ref)
     b, j = pl.program_id(0), pl.program_id(1)
     book = book_ref[...]
@@ -105,7 +111,7 @@ def _kernel_quant(bt_ref, cl_ref, qp_ref, q_ref, ki_ref, ks_ref, vi_ref, vs_ref,
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
     _flash_update(s, _deq_block(vi_ref[0], vs_ref[0], book), cl_ref[b], qp_ref[0],
-                  j, bs, m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
+                  j, bs, window, m_ref, l_ref, acc_ref, o_ref, j == max_blk - 1)
 
 
 def paged_attn_kernel_call(
@@ -115,6 +121,7 @@ def paged_attn_kernel_call(
     ctx_lens: jax.Array,  # (B,) int32
     q_pos: jax.Array,  # (B, S) int32 absolute positions; < 0 = padded row
     softcap: float = 0.0,
+    window: int = 0,  # static sliding window; 0 = full causal attention
     interpret: bool = True,
 ) -> jax.Array:
     """Segmented paged decode/prefill attention; see module docstring."""
@@ -161,7 +168,8 @@ def paged_attn_kernel_call(
         ],
     )
     return pl.pallas_call(
-        functools.partial(kernel, bs=bs, max_blk=max_blk, softcap=softcap),
+        functools.partial(kernel, bs=bs, max_blk=max_blk, softcap=softcap,
+                          window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, sq, kv, g, hd), jnp.float32),
         interpret=interpret,

@@ -85,6 +85,7 @@ def paged_attn_ref(
     q_pos: jax.Array,  # (B, Sq) int32 absolute query positions (< 0 = padded)
     *,
     softcap: float = 0.0,
+    window: int = 0,
 ) -> jax.Array:
     """Paged causal GQA attention oracle: gather K/V blocks through the block
     table, attend with per-request masks. ``Sq`` is a query *segment* per
@@ -93,7 +94,10 @@ def paged_attn_ref(
     ``(block_tables[b, p // bs], p % bs)``; keys at positions
     ``>= ctx_lens[b]`` or ``> q_pos[b, s]`` are masked, so a padded query row
     (q_pos < 0) sees no keys and returns garbage to be discarded by the
-    caller. Returns f32, q shape.
+    caller. ``window > 0`` adds the sliding-window term (keys at
+    ``<= q_pos - window`` masked — same rule as the ring cache's ``_mask``),
+    which is also what makes freed out-of-window table entries (< 0, clamped
+    to block 0 for the gather) unreachable. Returns f32, q shape.
     """
     n_blocks, bs = k_pages.shape[0], k_pages.shape[1]
     bt = jnp.clip(block_tables, 0, n_blocks - 1)
@@ -109,6 +113,8 @@ def paged_attn_ref(
     valid = (k_pos[None, None, :] < ctx_lens[:, None, None]) & (
         k_pos[None, None, :] <= q_pos[:, :, None]
     )  # (B, Sq, Sk)
+    if window > 0:
+        valid &= k_pos[None, None, :] > q_pos[:, :, None] - window
     s = jnp.where(valid[:, None, None], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgst,btkh->bskgh", p, gv.astype(jnp.float32))
@@ -126,6 +132,7 @@ def paged_attn_quant_ref(
     q_pos: jax.Array,
     *,
     softcap: float = 0.0,
+    window: int = 0,
 ) -> jax.Array:
     """int4 variant: gather PACKED blocks, dequantize only the gathered set
     (codebook lookup x per-token scale) — the dense cache never exists in HBM.
@@ -150,6 +157,8 @@ def paged_attn_quant_ref(
     valid = (k_pos[None, None, :] < ctx_lens[:, None, None]) & (
         k_pos[None, None, :] <= q_pos[:, :, None]
     )
+    if window > 0:
+        valid &= k_pos[None, None, :] > q_pos[:, :, None] - window
     s = jnp.where(valid[:, None, None], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgst,btkh->bskgh", p, gv)

@@ -40,6 +40,8 @@ __all__ = [
     "attention_apply",
     "init_kv_cache",
     "init_paged_kv_cache",
+    "state_quantize",
+    "state_dequantize",
     "mlp_init",
     "mlp_apply",
 ]
@@ -296,6 +298,20 @@ def _kv_dequantize(packed: jax.Array, scale: jax.Array, codebook: jax.Array, dty
     return (codebook[unpack_int4(packed)] * scale).astype(dtype)
 
 
+def state_quantize(x: jax.Array, codebook: jax.Array):
+    """Recurrent-state int4 quantization (Mamba ``h`` (B, di, N) / RG-LRU
+    ``h`` (B, di)): per-vector RMS scale over the LAST dim + K-Means boundary
+    assignment, the exact KV-pool format reused for SSM state under the
+    ``recurrent`` cache policy. Returns (packed idx uint8, scale f32); the
+    last dim must be even (two int4 indices per byte)."""
+    return _kv_quantize(x, codebook)
+
+
+def state_dequantize(packed: jax.Array, scale: jax.Array, codebook: jax.Array):
+    """Inverse of :func:`state_quantize`; the recurrence runs in f32."""
+    return _kv_dequantize(packed, scale, codebook, jnp.float32)
+
+
 def _cache_write(cache: dict, k, v, positions):
     """Write the last min(S, C) tokens into ring slots; returns new cache.
 
@@ -451,7 +467,7 @@ def _paged_write(cache: dict, k, v, positions, ctx_lens):
     }
 
 
-def _paged_attend(cache: dict, q, q_pos, softcap):
+def _paged_attend(cache: dict, q, q_pos, softcap, window: int = 0):
     """Attention against the block pool through the block table.
 
     q: (B, S, KV, G, hd); q_pos: (B, S). Every batch row is a query *segment*
@@ -459,7 +475,10 @@ def _paged_attend(cache: dict, q, q_pos, softcap):
     token-budget step: B == n_tokens rows of S == 1). On TPU backends the
     Pallas gather kernel is the default route (REPRO_PAGED_KERNEL=0 opts
     out); elsewhere the jnp reference is used, which XLA fuses well and
-    which lowers on any backend.
+    which lowers on any backend. ``window > 0`` masks keys at positions
+    ``<= q_pos - window`` (sliding-window layers under the windowed_paged
+    cache policy) — freed out-of-window table entries are < 0 and therefore
+    never reachable through the surviving mask.
     """
     from repro.kernels import ref as kref
 
@@ -481,7 +500,7 @@ def _paged_attend(cache: dict, q, q_pos, softcap):
                 args = (cache["pages_k"], cache["pages_v"])
             o = paged_attn_kernel_call(
                 q, *args, block_tables=bt, ctx_lens=cl, q_pos=q_pos,
-                softcap=softcap, interpret=should_interpret(),
+                softcap=softcap, window=window, interpret=should_interpret(),
             )
             return o.astype(q.dtype)
         if quantized:
@@ -489,10 +508,11 @@ def _paged_attend(cache: dict, q, q_pos, softcap):
                 q, cache["pages_k_idx"], cache["pages_k_scale"],
                 cache["pages_v_idx"], cache["pages_v_scale"],
                 cache["kv_codebook"], bt, cl, q_pos, softcap=softcap,
+                window=window,
             ).astype(q.dtype)
         return kref.paged_attn_ref(
             q, cache["pages_k"], cache["pages_v"], bt, cl, q_pos,
-            softcap=softcap,
+            softcap=softcap, window=window,
         ).astype(q.dtype)
 
 
@@ -561,9 +581,6 @@ def attention_apply(
         o = _attn_dispatch(q, k.astype(q.dtype), v.astype(q.dtype), positions, k_pos,
                            0, False, softcap, cfg)
     elif paged:
-        if window > 0:
-            raise ValueError("paged KV cache does not support sliding-window "
-                             "attention (windowed archs keep the ring cache)")
         if "token_slots" in cache:
             # packed layout: per-slot tables, one token per row — gather the
             # per-row table on device (host ships slots*max_blk ints, not T*)
@@ -573,7 +590,7 @@ def attention_apply(
             }
         q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(positions, (b, s))
         new_cache = _paged_write(cache, k, v, q_pos, cache["ctx_lens"])
-        o = _paged_attend(new_cache, q, q_pos, softcap)
+        o = _paged_attend(new_cache, q, q_pos, softcap, window)
     elif cache is not None:
         new_cache = _cache_write(cache, k, v, positions)
         ck, cv = _cache_read(new_cache, x.dtype)

@@ -24,7 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
 
-__all__ = ["init", "apply", "init_caches"]
+__all__ = ["init", "apply", "init_caches", "cache_policies"]
 
 _CHUNK = 128  # associative-scan chunk (memory knob; halving it was measured at <1% HBM — the (B,S,di,N) scan output dominates, not the chunk workspace)
 
@@ -70,18 +70,51 @@ def init(key, cfg: ModelConfig):
     return params
 
 
-def init_caches(cfg: ModelConfig, batch: int, cache_len: int = 0, dtype=jnp.float32,
-                quantized: bool = False):
-    """SSM state + conv tail per layer (cache_len unused: state is O(1);
-    quantized is a no-op — there is no KV cache to quantize)."""
-    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
-    one = lambda: {
-        "h": jnp.zeros((batch, di, n), jnp.float32),
-        "conv": jnp.zeros((batch, cw - 1, di), dtype),
+def _state_cache(batch: int, di: int, n: int, cw: int, dtype, quantized: bool):
+    """One layer's recurrent state: SSM state h + conv tail.
+
+    quantized=True stores h as K-Means int4 (layers.state_quantize format:
+    packed indices + per-row RMS scale + shared codebook); the conv tail stays
+    fp — it is cw-1 tokens, not O(context), so there is nothing to save.
+    """
+    conv = jnp.zeros((batch, cw - 1, di), dtype)
+    if not quantized:
+        return {"h": jnp.zeros((batch, di, n), jnp.float32), "conv": conv}
+    from repro.models.model import _default_codebook  # structural codebook
+
+    return {
+        "h_idx": jnp.zeros((batch, di, n // 2), jnp.uint8),
+        "h_scale": jnp.zeros((batch, di, 1), jnp.float32),
+        "conv": conv,
+        "state_codebook": _default_codebook(4),
     }
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int = 0, dtype=jnp.float32,
+                quantized: bool = False, layout: str = "ring",
+                block_size: int = 16, n_blocks: int = 0):
+    """SSM state + conv tail per layer (cache_len unused: state is O(1)).
+
+    ``layout`` exists for interface parity with the attention families: the
+    paged serving path indexes the SAME slot-major state arrays by scheduler
+    slot (the ``recurrent`` cache policy costs zero KV blocks), so both
+    layouts return identical trees. quantized=True -> int4 K-Means state
+    (see _state_cache)."""
+    del layout, block_size, n_blocks  # state is slot-major in every layout
+    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    one = lambda: _state_cache(batch, di, n, cw, dtype, quantized)
     if cfg.scan_layers:
         return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
     return [one() for _ in range(cfg.n_layers)]
+
+
+def cache_policies(cfg: ModelConfig):
+    """Every Mamba block carries O(1) recurrent state: zero KV blocks, one
+    pinned state slot per request (snapshot/rollback handled host-side by the
+    scheduler + draft runner)."""
+    from repro.serving.paged_cache import CachePolicy
+
+    return [CachePolicy("recurrent")] * cfg.n_layers
 
 
 def _conv_causal(x, w, b, tail=None):
@@ -123,17 +156,79 @@ def _ssm_scan(a, bx, h0):
     return ys, h_final
 
 
-def _block_apply(p, x, cfg: ModelConfig, cache):
-    """One Mamba block. x: (B, S, d)."""
+def _ssm_scan_q(a, bx, h0, codebook):
+    """Sequential recurrence with PER-TOKEN state requantization.
+
+    The carry entering step t is always deq(quant(h_{t-1})): position t's
+    state depends only on the token stream, never on how a sequence was
+    chunked, so ring decode (one token per step) and the packed serving
+    layout (multi-token rows) produce bit-identical states. a, bx:
+    (B, S, ...) f32; h0 fp (already dequantized). Returns (hs fp per step,
+    h_idx per step, h_scale per step) — y uses the fp pre-quantization hs.
+    """
+
+    def step(h, ab):
+        at, bt = ab
+        hn = at * h + bt
+        idx, sc = L.state_quantize(hn, codebook)
+        return L.state_dequantize(idx, sc, codebook), (hn, idx, sc)
+
+    _, (hs, idxs, scs) = jax.lax.scan(step, h0, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), idxs.swapaxes(0, 1), scs.swapaxes(0, 1)
+
+
+def _packed_conv_tails(tail0, xs, cw):
+    """Per-cell conv tails for the packed layout. tail0: (G, cw-1, di) tail
+    gathered by slot; xs: (G, S, di) raw pre-conv inputs. Returns
+    (G, S, cw-1, di): cell i holds the tail AFTER consuming tokens 0..i."""
+    z = jnp.concatenate([tail0.astype(xs.dtype), xs], axis=1)
+    idx = jnp.arange(xs.shape[1])[:, None] + jnp.arange(1, cw)[None, :]
+    return z[:, idx]
+
+
+def _take_final(steps, n_valid):
+    """steps: (G, S, ...) per-cell values; pick index n_valid-1 per row
+    (clamped to 0 for all-pad rows, whose scatter is dropped anyway)."""
+    g = steps.shape[0]
+    i = jnp.clip(n_valid - 1, 0).astype(jnp.int32)
+    i = i.reshape((g,) + (1,) * (steps.ndim - 1))
+    return jnp.take_along_axis(steps, i, axis=1)[:, 0]
+
+
+def _block_apply(p, x, cfg: ModelConfig, cache, positions=None):
+    """One Mamba block. x: (B, S, d).
+
+    Cache layouts:
+      * ring (training=None / decode): {"h", "conv"}, or {"h_idx", "h_scale",
+        "conv", "state_codebook"} when the state is int4 K-Means quantized.
+      * packed serving: the same slot-major pools plus a "token_slots" (G,)
+        row->slot map and (G, S) positions with -1 marking pad cells. Each
+        scheduler slot appears in AT MOST ONE row per dispatch and a row's
+        valid cells are a contiguous prefix (the scheduler/draft runner
+        enforce both). The block gathers state by slot, runs the row, and
+        scatters back the state at the LAST VALID cell (all-pad rows are
+        dropped). It also emits per-cell "*_steps" transients so the
+        scheduler can rewind a speculative row to its last accepted token
+        (see paged_cache.split_step_extras).
+    """
     di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    packed = cache is not None and "token_slots" in cache
+    quantized = cache is not None and "h_idx" in cache
     residual = x
     x = L.norm_apply(p["norm"], x, cfg.norm)
     xz = L.dense_apply(p["in_proj"], x, "mamba.in_proj")
     xs, z = jnp.split(xz, 2, axis=-1)
     xs = constrain(xs, "batch", "seq", "d_inner")
 
-    tail = cache["conv"] if cache is not None else None
-    xs, new_tail = _conv_causal(xs, p["conv_w"], p["conv_b"], tail)
+    if packed:
+        slots = cache["token_slots"]  # (G,)
+        n_slots = cache["conv"].shape[0]
+        n_valid = (positions >= 0).sum(axis=1)  # (G,)
+        tail0 = cache["conv"][slots]
+        tails = _packed_conv_tails(tail0, xs, cfg.ssm_conv).astype(cache["conv"].dtype)
+    else:
+        tail0 = cache["conv"] if cache is not None else None
+    xs, new_tail = _conv_causal(xs, p["conv_w"], p["conv_b"], tail0)
     xs = jax.nn.silu(xs)
 
     proj = L.dense_apply(p["x_proj"], xs, "mamba.x_proj").astype(jnp.float32)
@@ -148,17 +243,66 @@ def _block_apply(p, x, cfg: ModelConfig, cache):
     a_bar = jnp.exp(dt[..., None] * a)  # (B, S, di, N)
     bx = (dt * xf)[..., None] * bmat[..., None, :]  # (B, S, di, N)
 
-    h0 = (
-        cache["h"]
-        if cache is not None
-        else jnp.zeros((x.shape[0], di, n), jnp.float32)
-    )
-    hs, h_final = _ssm_scan(a_bar, bx, h0)
+    if cache is None:
+        h0 = jnp.zeros((x.shape[0], di, n), jnp.float32)
+    elif quantized:
+        book = cache["state_codebook"]
+        h0 = L.state_dequantize(
+            cache["h_idx"][slots] if packed else cache["h_idx"],
+            cache["h_scale"][slots] if packed else cache["h_scale"],
+            book,
+        )
+    else:
+        h0 = cache["h"][slots] if packed else cache["h"]
+
+    if quantized:
+        hs, h_idx_steps, h_sc_steps = _ssm_scan_q(a_bar, bx, h0, book)
+    else:
+        hs, h_final = _ssm_scan(a_bar, bx, h0)
     y = jnp.einsum("bsdn,bsn->bsd", hs, cmat) + p["D"] * xf  # (B, S, di)
     y = (y.astype(xs.dtype)) * jax.nn.silu(z)
     y = constrain(y, "batch", "seq", "d_inner")
     out = L.dense_apply(p["out_proj"], y, "mamba.out_proj")
-    new_cache = None if cache is None else {"h": h_final, "conv": new_tail}
+
+    if cache is None:
+        new_cache = None
+    elif packed:
+        # Pad cells are TRAILING, so the conv/scan values at valid cells are
+        # untouched by garbage pad tokens; the state at cell n_valid-1 is the
+        # row's true final state. Rows with zero valid cells scatter
+        # out-of-bounds and are dropped.
+        sc_idx = jnp.where(n_valid > 0, slots, n_slots)
+        if quantized:
+            new_cache = dict(
+                cache,
+                h_idx=cache["h_idx"].at[sc_idx].set(
+                    _take_final(h_idx_steps, n_valid), mode="drop"),
+                h_scale=cache["h_scale"].at[sc_idx].set(
+                    _take_final(h_sc_steps, n_valid), mode="drop"),
+                conv=cache["conv"].at[sc_idx].set(
+                    _take_final(tails, n_valid), mode="drop"),
+                h_idx_steps=h_idx_steps,
+                h_scale_steps=h_sc_steps,
+                conv_steps=tails,
+            )
+        else:
+            new_cache = dict(
+                cache,
+                h=cache["h"].at[sc_idx].set(_take_final(hs, n_valid), mode="drop"),
+                conv=cache["conv"].at[sc_idx].set(
+                    _take_final(tails, n_valid), mode="drop"),
+                h_steps=hs,
+                conv_steps=tails,
+            )
+    elif quantized:
+        new_cache = {
+            "h_idx": h_idx_steps[:, -1],
+            "h_scale": h_sc_steps[:, -1],
+            "conv": new_tail,
+            "state_codebook": book,
+        }
+    else:
+        new_cache = {"h": h_final, "conv": new_tail}
     return residual + out, new_cache
 
 
@@ -176,7 +320,7 @@ def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches
                 y, _ = _block_apply(xs, carry, cfg, None)
                 return y, None
             p, c = xs
-            y, nc = _block_apply(p, carry, cfg, c)
+            y, nc = _block_apply(p, carry, cfg, c, positions)
             return y, nc
 
         if cfg.remat == "block":
@@ -187,7 +331,7 @@ def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches
         new_caches = []
         for i, p in enumerate(params["blocks"]):
             c = None if caches is None else caches[i]
-            x, nc = _block_apply(p, x, cfg, c)
+            x, nc = _block_apply(p, x, cfg, c, positions)
             new_caches.append(nc)
         if caches is None:
             new_caches = None

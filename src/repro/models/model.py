@@ -21,7 +21,6 @@ params, there is no ambient/global apply config.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any
 
 import jax
@@ -68,19 +67,29 @@ class Model:
     def init_caches(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
                     quantized: bool = False, layout: str = "ring",
                     block_size: int = 16, n_blocks: int = 0):
-        """layout="ring" (every family) or "paged" (attention-cache families:
-        dense/audio/moe) — a global block pool for the continuous-batching
-        scheduler; see repro.serving.paged_cache."""
+        """layout="ring" (every family) or "paged" (families exporting cache
+        policies: dense/audio/moe/ssm/hybrid) — per-layer pools for the
+        continuous-batching scheduler: a global block pool for (windowed)
+        paged-KV layers, slot-indexed constant-size state for recurrent
+        layers; see repro.serving.paged_cache."""
         if layout == "paged":
-            if not self.supports_paged_cache():
-                raise ValueError(f"family {self.cfg.family} has no paged KV cache")
+            if self.cache_policies() is None:
+                raise ValueError(
+                    f"family {self.cfg.family} exports no cache policies "
+                    "(no paged serving layout)"
+                )
             return self._mod.init_caches(self.cfg, batch, cache_len, dtype, quantized,
                                          layout="paged", block_size=block_size,
                                          n_blocks=n_blocks)
         return self._mod.init_caches(self.cfg, batch, cache_len, dtype, quantized)
 
-    def supports_paged_cache(self) -> bool:
-        return self.cfg.family in ("dense", "audio", "moe") and not self.cfg.sliding_window
+    def cache_policies(self):
+        """Per-layer :class:`~repro.serving.paged_cache.CachePolicy` list for
+        the serving scheduler, or None when the family cannot serve through
+        the packed paged step (vlm — the engine falls back to the fixed-slot
+        ring path)."""
+        fn = getattr(self._mod, "cache_policies", None)
+        return None if fn is None else fn(self.cfg)
 
     def apply(self, params, batch: dict, *, positions=None, caches=None,
               last_only: bool = False, return_hidden_only: bool = False) -> ModelOutput:
@@ -99,23 +108,6 @@ class Model:
         if return_hidden_only:
             return ModelOutput(None, caches_out, aux, hidden=val)
         return ModelOutput(val, caches_out, aux)
-
-    def quantize(self, params, qcfg, calib: dict | None = None) -> dict:
-        """DEPRECATED shim: one global config == a rule-free QuantSpec.
-
-        Use ``quantize_model(model, params, spec, calib)`` with a
-        :class:`~repro.core.quantspec.QuantSpec` instead — it expresses
-        per-layer precision/outlier budgets and skip rules this method can't.
-        Kept for one release so existing callers keep working.
-        """
-        if isinstance(qcfg, QuantSpec):  # forward politely, no warning
-            return quantize_model(self, params, qcfg, calib)
-        warnings.warn(
-            "Model.quantize(params, qcfg) is deprecated; use "
-            "quantize_model(model, params, QuantSpec(base=qcfg), calib)",
-            DeprecationWarning, stacklevel=2,
-        )
-        return quantize_model(self, params, QuantSpec(base=qcfg), calib)
 
 
 def build(cfg: ModelConfig) -> Model:

@@ -22,7 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain, replicate
 from repro.models import layers as L
 
-__all__ = ["init", "apply", "init_caches", "moe_capacity"]
+__all__ = ["init", "apply", "init_caches", "cache_policies", "moe_capacity"]
 
 
 def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
@@ -182,9 +182,15 @@ def init(key, cfg: ModelConfig):
     return params
 
 
-from repro.models.transformer import _embed_in, _logits_out, init_caches as _tf_init_caches  # noqa: E402
+from repro.models.transformer import (  # noqa: E402
+    _embed_in,
+    _logits_out,
+    cache_policies as _tf_cache_policies,
+    init_caches as _tf_init_caches,
+)
 
 init_caches = _tf_init_caches
+cache_policies = _tf_cache_policies  # same attention stack -> same policies
 
 
 def _block_apply(p, x, cfg: ModelConfig, positions, cache):

@@ -27,9 +27,15 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
-from repro.models.mamba import _conv_causal, _ssm_scan
+from repro.models.mamba import (
+    _conv_causal,
+    _packed_conv_tails,
+    _ssm_scan,
+    _ssm_scan_q,
+    _take_final,
+)
 
-__all__ = ["init", "apply", "init_caches", "expanded_pattern"]
+__all__ = ["init", "apply", "init_caches", "cache_policies", "expanded_pattern"]
 
 _C_RGLRU = 8.0
 
@@ -86,55 +92,156 @@ def init(key, cfg: ModelConfig):
     return params
 
 
+def _rec_state(batch: int, di: int, cw: int, dtype, quantized: bool):
+    """One RG-LRU layer's state: LRU h + conv tail. quantized=True stores h
+    as K-Means int4 (layers.state_quantize over the width dim); the conv
+    tail (cw-1 tokens) stays fp."""
+    conv = jnp.zeros((batch, cw - 1, di), dtype)
+    if not quantized:
+        return {"h": jnp.zeros((batch, di), jnp.float32), "conv": conv}
+    from repro.models.model import _default_codebook  # structural codebook
+
+    return {
+        "h_idx": jnp.zeros((batch, di // 2), jnp.uint8),
+        "h_scale": jnp.zeros((batch, 1), jnp.float32),
+        "conv": conv,
+        "state_codebook": _default_codebook(4),
+    }
+
+
 def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
-                quantized: bool = False):
+                quantized: bool = False, layout: str = "ring",
+                block_size: int = 16, n_blocks: int = 0):
+    """Heterogeneous cache list: recurrent layers get slot-major state in
+    EVERY layout (the recurrent policy costs zero blocks); attention layers
+    get a ring buffer clamped to the window (layout="ring") or a share of
+    the global paged pool with logical unclamped tables (layout="paged" —
+    the scheduler's windowed_paged policy frees out-of-window blocks)."""
     di = cfg.d_inner or cfg.d_model
-    if cfg.sliding_window:
-        cache_len = min(cache_len, cfg.sliding_window)
+    if layout == "paged":
+        if n_blocks <= 0:
+            n_blocks = batch * -(-cache_len // block_size)
+        attn_one = lambda: L.init_paged_kv_cache(cfg, n_blocks, block_size, dtype, quantized)
+    else:
+        kv_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        attn_one = lambda: L.init_kv_cache(cfg, batch, kv_len, dtype, quantized)
     caches = []
     for kind in expanded_pattern(cfg):
         if kind == "rec":
-            caches.append(
-                {
-                    "h": jnp.zeros((batch, di), jnp.float32),
-                    "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
-                }
-            )
+            caches.append(_rec_state(batch, di, cfg.ssm_conv, dtype, quantized))
         else:
-            caches.append(L.init_kv_cache(cfg, batch, cache_len, dtype, quantized))
+            caches.append(attn_one())
     return caches
 
 
-def _rglru(p, u: jax.Array, h0: jax.Array):
-    """u: (B, S, di) post-conv activations; h0: (B, di) f32."""
+def cache_policies(cfg: ModelConfig):
+    """Per-layer policies following the block pattern: rec -> recurrent
+    (zero blocks, one pinned state slot), attn -> windowed paged KV (local
+    attention always has a window in this family; fall back to full paged
+    KV if a config clears it)."""
+    from repro.serving.paged_cache import CachePolicy
+
+    if cfg.sliding_window:
+        attn = CachePolicy("windowed_paged", window=cfg.sliding_window)
+    else:
+        attn = CachePolicy("paged_kv")
+    rec = CachePolicy("recurrent")
+    return [rec if kind == "rec" else attn for kind in expanded_pattern(cfg)]
+
+
+def _rglru_gates(p, u: jax.Array):
+    """u: (B, S, di) post-conv. Returns (a_t, gated input), both f32."""
     uf = u.astype(jnp.float32)
     r = jax.nn.sigmoid(L.dense_apply(p["w_a"], u, "rglru.wa").astype(jnp.float32))
     i = jax.nn.sigmoid(L.dense_apply(p["w_x"], u, "rglru.wx").astype(jnp.float32))
     log_a = jax.nn.log_sigmoid(p["lambda"])  # (di,) < 0
     a = jnp.exp(_C_RGLRU * r * log_a)  # (B, S, di)
     gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i * uf)
-    ys, h_final = _ssm_scan(a[..., None], gated[..., None], h0[..., None])
-    return ys[..., 0].astype(u.dtype), h_final[..., 0]
+    return a, gated
 
 
-def _rec_block_apply(p, x, cfg: ModelConfig, cache):
+def _rec_block_apply(p, x, cfg: ModelConfig, cache, positions=None):
+    """One RG-LRU block. Cache layouts mirror mamba._block_apply: ring
+    {"h"|"h_idx"+"h_scale"+"state_codebook", "conv"}, or the packed serving
+    layout (slot-major pools + "token_slots" + (G, S) positions with -1
+    pads; one row per slot, valid cells a contiguous prefix) which emits
+    per-cell "*_steps" transients for speculative rewind."""
+    packed = cache is not None and "token_slots" in cache
+    quantized = cache is not None and "h_idx" in cache
     residual = x
     n = L.norm_apply(p["norm1"], x, cfg.norm)
     y = jax.nn.gelu(L.dense_apply(p["lin_y"], n, "rec.lin_y"))
     u = L.dense_apply(p["lin_x"], n, "rec.lin_x")
     u = constrain(u, "batch", "seq", "d_inner")
-    tail = cache["conv"] if cache is not None else None
-    u, new_tail = _conv_causal(u, p["conv_w"], p["conv_b"], tail)
-    h0 = (
-        cache["h"]
-        if cache is not None
-        else jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
-    )
-    u, h_final = _rglru(p, u, h0)
+    if packed:
+        slots = cache["token_slots"]  # (G,)
+        n_slots = cache["conv"].shape[0]
+        n_valid = (positions >= 0).sum(axis=1)  # (G,)
+        tail0 = cache["conv"][slots]
+        tails = _packed_conv_tails(tail0, u, cfg.ssm_conv).astype(cache["conv"].dtype)
+    else:
+        tail0 = cache["conv"] if cache is not None else None
+    u, new_tail = _conv_causal(u, p["conv_w"], p["conv_b"], tail0)
+
+    if cache is None:
+        h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    elif quantized:
+        book = cache["state_codebook"]
+        h0 = L.state_dequantize(
+            cache["h_idx"][slots] if packed else cache["h_idx"],
+            cache["h_scale"][slots] if packed else cache["h_scale"],
+            book,
+        )
+    else:
+        h0 = cache["h"][slots] if packed else cache["h"]
+
+    a, gated = _rglru_gates(p, u)
+    if quantized:
+        hs, h_idx_steps, h_sc_steps = _ssm_scan_q(a, gated, h0, book)
+        h_final = None
+    else:
+        ys, hf = _ssm_scan(a[..., None], gated[..., None], h0[..., None])
+        hs, h_final = ys[..., 0], hf[..., 0]
+    u = hs.astype(u.dtype)
     out = L.dense_apply(p["lin_out"], y * u, "rec.lin_out")
     x = residual + out
     x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["norm2"], x, cfg.norm), cfg.act_fn)
-    new_cache = None if cache is None else {"h": h_final, "conv": new_tail}
+
+    if cache is None:
+        new_cache = None
+    elif packed:
+        sc_idx = jnp.where(n_valid > 0, slots, n_slots)
+        if quantized:
+            new_cache = dict(
+                cache,
+                h_idx=cache["h_idx"].at[sc_idx].set(
+                    _take_final(h_idx_steps, n_valid), mode="drop"),
+                h_scale=cache["h_scale"].at[sc_idx].set(
+                    _take_final(h_sc_steps, n_valid), mode="drop"),
+                conv=cache["conv"].at[sc_idx].set(
+                    _take_final(tails, n_valid), mode="drop"),
+                h_idx_steps=h_idx_steps,
+                h_scale_steps=h_sc_steps,
+                conv_steps=tails,
+            )
+        else:
+            new_cache = dict(
+                cache,
+                h=cache["h"].at[sc_idx].set(_take_final(hs, n_valid), mode="drop"),
+                conv=cache["conv"].at[sc_idx].set(
+                    _take_final(tails, n_valid), mode="drop"),
+                h_steps=hs,
+                conv_steps=tails,
+            )
+    elif quantized:
+        new_cache = {
+            "h_idx": h_idx_steps[:, -1],
+            "h_scale": h_sc_steps[:, -1],
+            "conv": new_tail,
+            "state_codebook": book,
+        }
+    else:
+        new_cache = {"h": h_final, "conv": new_tail}
     return constrain(x, "batch", "seq_sp", "d_model"), new_cache
 
 
@@ -167,7 +274,7 @@ def apply(params, cfg: ModelConfig, tokens: jax.Array, *, positions=None, caches
     for i, (p, kind) in enumerate(zip(params["blocks"], expanded_pattern(cfg))):
         c = None if caches is None else caches[i]
         if kind == "rec":
-            x, nc = rec_fn(p, x, cfg, c)
+            x, nc = rec_fn(p, x, cfg, c, positions)
         else:
             x, nc = attn_fn(p, x, cfg, positions, c)
         new_caches.append(nc)

@@ -16,7 +16,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
 
-__all__ = ["init", "apply", "init_caches"]
+__all__ = ["init", "apply", "init_caches", "cache_policies"]
 
 
 def _init_block(key, cfg: ModelConfig, dtype):
@@ -64,11 +64,13 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16
     only size the default pool (``batch * ceil(cache_len / block_size)``
     blocks when n_blocks=0). The returned tree holds pools ONLY — the
     serving scheduler attaches per-call ``block_tables``/``ctx_lens``
-    (repro.serving.paged_cache.attach_tables) before model.apply.
+    (repro.serving.paged_cache.attach_tables) before model.apply. SWA
+    configs use the same pool with LOGICAL (unclamped) tables: position p
+    always lives at table[p // block_size], and the scheduler frees table
+    entries that fall wholly out of the window (windowed_paged policy) —
+    only the ring layout clamps cache_len to the window.
     """
     if layout == "paged":
-        if cfg.sliding_window:
-            raise ValueError("paged layout requires full attention (no SWA)")
         if n_blocks <= 0:
             n_blocks = batch * -(-cache_len // block_size)
         one = lambda: L.init_paged_kv_cache(cfg, n_blocks, block_size, dtype, quantized)
@@ -79,6 +81,19 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16
     if cfg.scan_layers:
         return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
     return [one() for _ in range(cfg.n_layers)]
+
+
+def cache_policies(cfg: ModelConfig):
+    """Per-layer cache policy for the serving scheduler: every dense block is
+    paged KV; SWA configs get the windowed variant (out-of-window blocks are
+    freed, capping steady-state blocks at ceil(window / block_size) + 1)."""
+    from repro.serving.paged_cache import CachePolicy
+
+    if cfg.sliding_window:
+        pol = CachePolicy("windowed_paged", window=cfg.sliding_window)
+    else:
+        pol = CachePolicy("paged_kv")
+    return [pol] * cfg.n_layers
 
 
 def _block_apply(p, x, cfg: ModelConfig, positions, cache):

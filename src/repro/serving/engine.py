@@ -4,15 +4,18 @@
 multi-pod dry-run lowers (decode = one new token against a ring-buffer KV
 cache of the shape-specified length). ``ServingEngine`` wraps generation:
 
-* attention-cache families (dense/audio/moe, full attention) serve through
+* families exporting per-layer **cache policies** (``model.cache_policies()``
+  is not None: dense/audio/moe full attention -> ``paged_kv``, SWA archs ->
+  ``windowed_paged``, ssm/hybrid -> ``recurrent`` state layers) serve through
   the **paged continuous-batching scheduler** (serving/scheduler.py) — a
   global K-Means-quantizable block pool, per-request block tables, ONE
   packed token-budget step per iteration mixing prefill and decode tokens,
   per-step slot refill, preemption-by-eviction, and refcounted
   **prefix-sharing** of content-hashed blocks with copy-on-write
-  (``ServeConfig.prefix_cache``). Overflow beyond ``batch_slots`` queues;
-  it is NOT recursively chunked.
-* other families (ssm/hybrid/vlm, SWA archs) fall back to the fixed-slot
+  (``ServeConfig.prefix_cache``; auto-disabled unless every layer is
+  ``paged_kv``). Overflow beyond ``batch_slots`` queues; it is NOT
+  recursively chunked.
+* families without policies (vlm/multimodal) fall back to the fixed-slot
   ring-buffer batcher, iterating slot-sized batches; left-pad tokens are
   masked out of attention via a per-row ``pad_len`` on the ring caches.
 
@@ -165,7 +168,16 @@ class ServingEngine:
         self.model, self.sc, self.slots = model, sc, batch_slots
         self.params = params
         self.telemetry = make_telemetry(sc.telemetry)
-        self.paged = sc.paged and model.supports_paged_cache()
+        policies = model.cache_policies()
+        self.paged = sc.paged and policies is not None
+        if self.paged and sc.speculative is not None \
+                and any(p.kind == "recurrent" for p in policies):
+            # recurrent layers need each verify segment (k+1 cells) in ONE
+            # grid row; widen seg_width for the user instead of raising
+            min_w = sc.speculative.k + 1
+            if sc.seg_width < min_w:
+                sc = dataclasses.replace(sc, seg_width=min_w)
+                self.sc = sc
         if self.paged:
             from repro.serving.scheduler import Scheduler
 

@@ -42,10 +42,130 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PagedCacheConfig", "BlockAllocator", "attach_tables", "detach_tables",
-           "blocks_needed", "chain_hash", "prefix_seed", "copy_blocks"]
+__all__ = ["PagedCacheConfig", "BlockAllocator", "CachePolicy", "attach_tables",
+           "detach_tables", "blocks_needed", "chain_hash", "prefix_seed",
+           "copy_blocks", "release_horizon", "windowed_block_cap",
+           "recurrent_state_keys", "zero_state_slot", "restore_state_slot",
+           "split_step_extras"]
 
 _TABLE_KEYS = ("block_tables", "ctx_lens", "token_slots")
+
+# per-slot recurrent state arrays (mamba / RG-LRU): everything the scheduler
+# must zero on (re-)admission and the draft must snapshot/restore on rollback.
+# "state_codebook" is static (shared centroids) and deliberately absent.
+_STATE_KEYS = ("h", "conv", "h_idx", "h_scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """Per-layer cache descriptor. One of three kinds:
+
+    * ``paged_kv`` — full-attention KV in the shared refcounted block pool
+      (today's path). Cost: ``blocks_needed(context)`` blocks. Prefix sharing
+      and speculation both compose.
+    * ``windowed_paged`` — paged KV for a sliding-window layer: blocks whose
+      every token has fallen out of ``window`` are freed back to the pool, so
+      steady-state cost per request is capped at
+      ``ceil(window / block_size) + 1`` blocks. Speculation composes; prefix
+      sharing is disabled (an aliased mid-context block may already be freed
+      by one holder while another still needs it... the registry is simply
+      gated off when any windowed layer is present).
+    * ``recurrent`` — constant-size Mamba / RG-LRU state: zero blocks, one
+      pinned state slot per request. Speculative verify composes via per-step
+      state trajectories (the packed step returns them as extras) plus a
+      corrective commit on partial acceptance; preemption zeroes the slot and
+      replays. Prefix sharing does not apply (no blocks to alias).
+    """
+
+    kind: str  # "paged_kv" | "windowed_paged" | "recurrent"
+    window: int = 0  # windowed_paged only: the layer's sliding window
+
+    def __post_init__(self):
+        if self.kind not in ("paged_kv", "windowed_paged", "recurrent"):
+            raise ValueError(f"unknown cache policy kind {self.kind!r}")
+        if self.kind == "windowed_paged" and self.window <= 0:
+            raise ValueError("windowed_paged policy needs window > 0")
+
+
+def release_horizon(policies) -> int:
+    """The window W such that blocks wholly below ``prefilled - W + 1`` can
+    be freed, or 0 when nothing may ever be freed. Block ids are shared by
+    every layer's pool, so one full-attention (``paged_kv``) layer pins the
+    whole table; otherwise the *minimum* window over windowed layers is
+    conservative for all of them. Pure-recurrent stacks hold no blocks at
+    all (also 0: there is nothing to release)."""
+    if any(p.kind == "paged_kv" for p in policies):
+        return 0
+    windows = [p.window for p in policies if p.kind == "windowed_paged"]
+    return min(windows) if windows else 0
+
+
+def windowed_block_cap(window: int, block_size: int) -> int:
+    """Steady-state live blocks per request for a windowed layer: the window
+    can straddle ``ceil(window / block_size)`` blocks plus the partially
+    written block the decode head is growing into."""
+    return blocks_needed(window, block_size) + 1
+
+
+def recurrent_state_keys(layer: dict) -> list[str]:
+    """The per-slot state arrays of one (possibly scanned) cache layer dict —
+    empty for paged KV layers, which makes every helper below a no-op on
+    them."""
+    return [k for k in _STATE_KEYS if k in layer]
+
+
+def zero_state_slot(pools, slot):
+    """Zero one scheduler slot's recurrent state across every layer (new or
+    re-admitted occupant: prefill replays from position 0). jit-able; paged
+    pool arrays pass through untouched."""
+
+    def z(layer, scanned):
+        out = dict(layer)
+        for k in recurrent_state_keys(layer):
+            v = layer[k]
+            out[k] = v.at[:, slot].set(0) if scanned else v.at[slot].set(0)
+        return out
+
+    if isinstance(pools, dict):
+        return z(pools, True)
+    return [z(layer, False) for layer in pools]
+
+
+def restore_state_slot(pools, snapshot, slot):
+    """Copy one slot's recurrent state from ``snapshot`` (an earlier pools
+    tree) back into ``pools`` — the draft runner's speculative rollback for
+    recurrent layers. jit-able."""
+
+    def r(layer, snap, scanned):
+        out = dict(layer)
+        for k in recurrent_state_keys(layer):
+            if scanned:
+                out[k] = layer[k].at[:, slot].set(snap[k][:, slot])
+            else:
+                out[k] = layer[k].at[slot].set(snap[k][slot])
+        return out
+
+    if isinstance(pools, dict):
+        return r(pools, snapshot, True)
+    return [r(layer, snap, False) for layer, snap in zip(pools, snapshot)]
+
+
+def split_step_extras(caches):
+    """Split a packed step's returned caches into (persistent pools, per-step
+    extras). Recurrent layers in the packed layout emit transient ``*_steps``
+    trajectories (state after each grid cell) alongside the optimistically
+    scattered pool state; the scheduler needs them only for the corrective
+    commit on partial speculative acceptance, so they never persist."""
+
+    def split(layer):
+        pool = {k: v for k, v in layer.items() if not k.endswith("_steps")}
+        steps = {k: v for k, v in layer.items() if k.endswith("_steps")}
+        return pool, steps
+
+    if isinstance(caches, dict):
+        return split(caches)
+    pairs = [split(layer) for layer in caches]
+    return [p for p, _ in pairs], [s for _, s in pairs]
 
 
 @dataclasses.dataclass(frozen=True)

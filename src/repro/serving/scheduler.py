@@ -84,6 +84,8 @@ from repro.serving.paged_cache import (
     chain_hash,
     copy_blocks,
     prefix_seed,
+    release_horizon,
+    zero_state_slot,
 )
 from repro.serving.speculative import (
     DraftRunner,
@@ -159,8 +161,21 @@ class Scheduler:
 
     def __init__(self, model, params, sc, slots: int = 8, draft=None,
                  telemetry=None):
-        if not model.supports_paged_cache():
-            raise ValueError(f"family {model.cfg.family} cannot use the paged scheduler")
+        policies = model.cache_policies()
+        if policies is None:
+            raise ValueError(
+                f"family {model.cfg.family} exports no cache policies "
+                "(cannot use the paged scheduler)"
+            )
+        self.policies = policies
+        # per-policy resource model: paged layers cost blocks, recurrent
+        # layers cost zero blocks but pin their slot's state; windowed layers
+        # additionally allow freeing out-of-window blocks (release_horizon
+        # is 0 whenever any full-attention layer still needs every block)
+        self._has_paged = any(
+            p.kind in ("paged_kv", "windowed_paged") for p in policies)
+        self._rec = any(p.kind == "recurrent" for p in policies)
+        self.release_window = release_horizon(policies)
         self.model, self.params, self.sc, self.slots = model, params, sc, slots
         self.telemetry = telemetry if telemetry is not None \
             else make_telemetry(getattr(sc, "telemetry", "metrics"))
@@ -209,6 +224,12 @@ class Scheduler:
                 f"{self.seg_width} but decode reservation needs "
                 f"{slots * self._dec_rows} (slots x ceil((k+1)/seg_width))"
             )
+        if self._rec and self._dec_rows > 1:
+            raise ValueError(
+                "recurrent layers gather/scatter state by slot, so a verify "
+                f"segment must fit in ONE grid row: raise seg_width to >= "
+                f"k+1 = {seg_len} (got {self.seg_width})"
+            )
         self.rows = rows
         self.token_budget = rows * self.seg_width
         max_blk = blocks_needed(sc.cache_len, sc.block_size)
@@ -219,7 +240,13 @@ class Scheduler:
             slots, sc.cache_len, jnp.dtype(sc.cache_dtype), quantized=sc.kv_quant,
             layout="paged", block_size=sc.block_size, n_blocks=n_blocks,
         )
-        self.allocator = BlockAllocator(n_blocks, prefix_cache=sc.prefix_cache,
+        # prefix sharing aliases physical blocks across requests, which only
+        # composes with layers that keep every block forever: windowed layers
+        # free out-of-window blocks (an alias would free a shared block) and
+        # recurrent layers have no blocks to share
+        prefix_on = sc.prefix_cache and bool(policies) and \
+            all(p.kind == "paged_kv" for p in policies)
+        self.allocator = BlockAllocator(n_blocks, prefix_cache=prefix_on,
                                         telemetry=self.telemetry)
         # chain-hash root: blocks are only shareable within one (layer-set,
         # quant-policy, geometry) identity — a pool restarted with a different
@@ -305,8 +332,15 @@ class Scheduler:
             "serving_draft_time_s", "total seconds in draft proposal")
         self._c_target_time = tel.counter(
             "serving_target_time_s", "total seconds in target packed steps")
+        self._g_live_peak = tel.gauge(
+            "serving_peak_live_blocks_per_seq",
+            help="high-water LIVE (non-freed) blocks held by any one request "
+                 "— bounded by ceil(window/block_size)+1 under windowed_paged")
         self._packed_fn = jax.jit(make_packed_fn(model))
         self._copy_fn = jax.jit(copy_blocks)
+        if self._rec:
+            self._zero_fn = jax.jit(zero_state_slot)
+            self._commit_fn = jax.jit(self._make_commit_fn())
 
     @property
     def stats(self) -> dict:
@@ -314,6 +348,7 @@ class Scheduler:
         zeros under ``telemetry="off"``). Read-only: mutate via telemetry."""
         d = {k: c.value for k, c in self._c.items()}
         d["peak_occupancy"] = self._g_peak.value
+        d["peak_live_blocks_per_seq"] = self._g_live_peak.value
         for k, g in self._g_lut.items():  # trace-time LUT route dispatch
             d[k] = g.value
         for k, g in self._g_outlier.items():  # Orizuru detect + comp routes
@@ -366,7 +401,7 @@ class Scheduler:
             return True
         if self._queue and not admitted:  # head can never fit: pool all idle
             r = self._queue[0]
-            need = blocks_needed(len(r.context) + 1, self.pcfg.block_size)
+            need = self._blocks_for(len(r.context) + 1)
             raise RuntimeError(
                 f"request {r.rid} needs {need} blocks (context + first decode);"
                 f" pool has {self.allocator.n_free}/{self.pcfg.n_blocks} free"
@@ -393,7 +428,7 @@ class Scheduler:
         bs = self.pcfg.block_size
         while self._queue and self._slot_free:
             r = self._queue[0]
-            need = blocks_needed(len(r.context) + 1, bs)
+            need = self._blocks_for(len(r.context) + 1)
             shared, hashes = self._match_prefix(r)  # increfs on hit
             fresh = self.allocator.alloc(need - len(shared))
             if fresh is None:
@@ -404,6 +439,11 @@ class Scheduler:
             r.blocks, r.block_hashes = shared + fresh, hashes
             r.slot, r.state = self._slot_free.pop(), RequestState.RUNNING
             r.prefilled = min(len(shared) * bs, len(r.context) - 1)
+            if self._rec:
+                # fresh occupant: the slot's recurrent state must not leak
+                # from the previous request (KV blocks are freshly allocated,
+                # state slots are reused in place)
+                self.pools = self._zero_fn(self.pools, r.slot)
             if self.draft is not None:
                 self.draft.reset(r.slot)
             if shared:
@@ -478,9 +518,15 @@ class Scheduler:
                 if rows_left <= 0:
                     break
                 if not r.decoding:
-                    n = min(rows_left * S, len(r.context) - r.prefilled)
+                    # recurrent state is gathered/scattered once per row, so
+                    # a slot gets at most ONE row per step: cap its prefill
+                    # chunk at seg_width tokens (pure-KV stacks may span rows)
+                    cap = S if self._rec else rows_left * S
+                    n = min(cap, len(r.context) - r.prefilled)
                     segments.append((r, r.prefilled, n))
                     rows_left -= -(-n // S)
+            if not self._has_paged:
+                break  # no blocks -> nothing to copy-on-write
             if self._cow_pass(decoders, segments):
                 break  # no preemption mid-pass: the plan above is still live
 
@@ -537,7 +583,7 @@ class Scheduler:
 
         t_dispatch = tel.now()
         with tel.annotate("packed_step"):
-            self.pools, logits = self._packed_fn(
+            self.pools, logits, extras = self._packed_fn(
                 self.params, self.pools, jnp.asarray(bt), jnp.asarray(slot_ids),
                 jnp.asarray(pos), jnp.asarray(ctx), jnp.asarray(tok),
             )
@@ -597,6 +643,13 @@ class Scheduler:
             tel.request_event(r.rid, "verify_round", drafted=len(d),
                               accepted=n_acc, committed=len(committed))
             self._rollback(r)
+            if self._rec and len(committed) < len(cells):
+                # the packed step scattered recurrent state at the row's last
+                # cell; rewind it to the last CONSUMED cell (next_token +
+                # committed[:-1] = cells 0..len(committed)-1)
+                self.pools = self._commit_fn(
+                    self.pools, extras, cells[0][0], r.slot,
+                    len(committed) - 1)
             self.draft.sync(r.slot, len(r.context))
         for r, start, n in segments:
             r.prefilled = start + n
@@ -611,6 +664,12 @@ class Scheduler:
                 tel.first_token(r.rid)
         for r in self._running:
             self._register_full_blocks(r)  # publish before anyone finishes
+        if self._has_paged:
+            for r in self._running:
+                if self.release_window:
+                    self._release_windowed(r)
+                self._g_live_peak.set_max(
+                    sum(1 for b in r.blocks if b >= 0))
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
         if tel.enabled:
@@ -627,6 +686,40 @@ class Scheduler:
                 blocks_copied=self._c["cow_copies"].value - cow0,
             )
 
+    def _blocks_for(self, n_tokens: int) -> int:
+        """Blocks to reserve for an ``n_tokens`` context: zero when no layer
+        is paged — recurrent state is slot-major, pinned by the slot."""
+        if not self._has_paged:
+            return 0
+        return blocks_needed(n_tokens, self.pcfg.block_size)
+
+    def _make_commit_fn(self):
+        """Jitted corrective commit for recurrent layers: a verify row's
+        packed step scattered the state at the row's LAST cell, but greedy
+        verification may consume only cells 0..m-1 — rewrite each state pool
+        from the per-cell "*_steps" transients at the last consumed cell.
+        Generic over the extras keys, so fp ("h_steps"/"conv_steps") and
+        quantized ("h_idx_steps"/"h_scale_steps"/"conv_steps") layers both
+        rewind; KV layers have empty extras and pass through."""
+
+        def fix_layer(pool, extras, row, slot, step, scanned):
+            out = dict(pool)
+            for key, steps in extras.items():
+                base = key[: -len("_steps")]
+                if scanned:  # leading (L, ...) layer dim rides the arrays
+                    out[base] = out[base].at[:, slot].set(steps[:, row, step])
+                else:
+                    out[base] = out[base].at[slot].set(steps[row, step])
+            return out
+
+        def commit(pools, extras, row, slot, step):
+            if isinstance(pools, dict):  # scan-stacked homogeneous family
+                return fix_layer(pools, extras, row, slot, step, True)
+            return [fix_layer(lp, le, row, slot, step, False)
+                    for lp, le in zip(pools, extras)]
+
+        return commit
+
     def _rollback(self, r: Request) -> None:
         """Free the blocks a verify segment grew that now hold only rejected
         draft tokens: everything past ``blocks_needed(len(context) + 1)``
@@ -636,10 +729,27 @@ class Scheduler:
         read, and are overwritten by the next round's writes. Freed tail
         blocks are never registered (registration stops at ``prefilled``) and
         never shared (aliasing only covers prompt blocks), so the truncate is
-        a plain decref to the free list."""
-        keep = blocks_needed(len(r.context) + 1, self.pcfg.block_size)
+        a plain decref to the free list. (Windowed -1 holes only ever sit in
+        the LEADING region below the write horizon, never in this tail.)"""
+        keep = self._blocks_for(len(r.context) + 1)
         if len(r.blocks) > keep:
             r.blocks = self.allocator.truncate(r.blocks, keep)
+
+    def _release_windowed(self, r: Request) -> None:
+        """Free blocks no future query of ``r`` can attend. With window W,
+        a query at position q attends keys > q - W; every future query sits
+        at >= r.prefilled, so block j (tokens [j*bs, (j+1)*bs)) is dead once
+        (j+1)*bs <= prefilled - W + 1. A freed entry leaves a -1 hole in the
+        LOGICAL table (position p stays at table[p // bs]); the attention
+        kernels clamp -1 to block 0 and the window mask makes those keys
+        unreachable. Steady-state live blocks per request are thus capped at
+        ceil(W / bs) + 1 (paged_cache.windowed_block_cap)."""
+        bs = self.pcfg.block_size
+        drop = max(0, r.prefilled - self.release_window + 1) // bs
+        for j in range(min(drop, len(r.blocks))):
+            if r.blocks[j] >= 0:
+                self.allocator.free([r.blocks[j]])
+                r.blocks[j] = -1
 
     def _cow_pass(self, decoders, segments) -> bool:
         """Copy-on-write: any block this step will write into whose refcount
@@ -698,8 +808,7 @@ class Scheduler:
         n_tokens - 1`` (the cells about to be written — one decode token, or
         a whole verify segment), evicting the youngest other request if the
         pool is dry."""
-        while blocks_needed(len(r.context) + n_tokens,
-                            self.pcfg.block_size) > len(r.blocks):
+        while self._blocks_for(len(r.context) + n_tokens) > len(r.blocks):
             got, _ = self._alloc_one(r)
             r.blocks.append(got)
 
@@ -742,8 +851,9 @@ class Scheduler:
 
     def _preempt(self, r: Request) -> None:
         # decref tail-first so a whole cached chain ages out leaf-before-root
-        # (evicting a root block would orphan its still-cached descendants)
-        self.allocator.free(list(reversed(r.blocks)))
+        # (evicting a root block would orphan its still-cached descendants);
+        # windowed -1 holes were already freed at release time
+        self.allocator.free([b for b in reversed(r.blocks) if b >= 0])
         r.blocks, r.block_hashes = [], []
         self._slot_free.append(r.slot)
         r.slot = -1
@@ -755,7 +865,7 @@ class Scheduler:
         self.telemetry.request_preempted(r.rid)
 
     def _finish(self, r: Request, results: dict) -> None:
-        self.allocator.free(list(reversed(r.blocks)))
+        self.allocator.free([b for b in reversed(r.blocks) if b >= 0])
         r.blocks, r.block_hashes = [], []
         self._slot_free.append(r.slot)
         r.slot = -1

@@ -50,7 +50,14 @@ import numpy as np
 
 from repro.core.qlinear import QLinearConfig
 from repro.core.quantspec import QuantSpec
-from repro.serving.paged_cache import attach_tables, blocks_needed, detach_tables
+from repro.serving.paged_cache import (
+    attach_tables,
+    blocks_needed,
+    detach_tables,
+    restore_state_slot,
+    split_step_extras,
+    zero_state_slot,
+)
 
 __all__ = ["SpeculativeConfig", "DraftRunner", "greedy_verify", "rejection_sample",
            "make_packed_fn", "load_draft", "DEFAULT_DRAFT_SPEC"]
@@ -110,14 +117,21 @@ def make_packed_fn(model):
     attends each token causally through that slot's block table (the S>1
     paged-attention layout: per-row block-table gather happens device-side in
     ``attention_apply``, one gather per *segment* rather than per token).
-    Returns (pools, logits (G, S, vocab))."""
+    Recurrent layers instead gather/scatter slot-major state by
+    ``slot_ids`` — for them a slot must appear in at most one row with valid
+    cells per call, and a row's valid cells must be a contiguous prefix.
+    Returns (pools, logits (G, S, vocab), extras) where ``extras`` holds the
+    recurrent layers' per-cell "*_steps" transients (empty dicts for pure
+    KV stacks) — the scheduler uses them to rewind partially-accepted
+    speculative rows (paged_cache.split_step_extras)."""
 
     def packed_step(params, pools, bt, slot_ids, positions, ctx, tokens):
         caches = attach_tables(pools, bt, ctx, model.cfg.n_layers,
                                model.cfg.scan_layers, token_slots=slot_ids)
         out = model.apply(params, {"tokens": tokens}, positions=positions,
                           caches=caches)
-        return detach_tables(out.caches), out.logits[..., : model.cfg.vocab_size]
+        pools, extras = split_step_extras(detach_tables(out.caches))
+        return pools, out.logits[..., : model.cfg.vocab_size], extras
 
     return packed_step
 
@@ -203,10 +217,13 @@ class DraftRunner:
                  block_size: int = 16, cache_dtype=jnp.float32,
                  kv_quant: bool = False, token_budget: int = 0,
                  telemetry=None):
-        if not model.supports_paged_cache():
+        policies = model.cache_policies()
+        if policies is None:
             raise ValueError(
-                f"draft family {model.cfg.family} cannot back a paged draft pool"
+                f"draft family {model.cfg.family} exports no cache policies "
+                "(cannot back a draft pool)"
             )
+        self._rec = any(p.kind == "recurrent" for p in policies)
         self.model, self.params, self.k = model, params, k
         self.slots = slots
         # headroom: the scanned loop writes up to position n + k for a row
@@ -234,6 +251,18 @@ class DraftRunner:
         self.pos = [0] * slots  # valid draft-cache positions per slot
         self._catch_fn = jax.jit(make_packed_fn(model))
         self._draft_fn = jax.jit(self._make_draft_loop())
+        if self._rec:
+            # recurrent state rollback is a host-side snapshot (the pools
+            # BEFORE the scan loop) restored per rejected slot, plus the
+            # zero-fill on admission; KV layers keep the counter mechanism
+            self._zero_fn = jax.jit(zero_state_slot)
+            self._restore_fn = jax.jit(restore_state_slot)
+            self._snap_pools = None
+            self._snap_base: dict[int, int] = {}
+            # recurrent catch-up runs one MULTI-TOKEN row per slot (state is
+            # gathered/scattered by slot, so a slot cannot span rows); this
+            # is the per-row segment length per dispatch
+            self._catch_S = 32
         self.steps = 0  # draft device dispatches (engine stats)
         from repro.serving.telemetry import NULL_TELEMETRY
 
@@ -260,8 +289,8 @@ class DraftRunner:
                 pools, tok, pos = carry
                 valid = pos >= 0
                 ctx = jnp.where(valid, pos + 1, 0)
-                pools, logits = packed(params, pools, bt, slot_ids,
-                                       pos[:, None], ctx, tok[:, None])
+                pools, logits, _ = packed(params, pools, bt, slot_ids,
+                                          pos[:, None], ctx, tok[:, None])
                 nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
                 return (pools, nxt, jnp.where(valid, pos + 1, -1)), nxt
 
@@ -275,11 +304,28 @@ class DraftRunner:
     def reset(self, slot: int) -> None:
         """New occupant for ``slot``: nothing in the draft cache is valid."""
         self.pos[slot] = 0
+        if self._rec:
+            self.pools = self._zero_fn(self.pools, slot)
 
     def sync(self, slot: int, n_valid: int) -> None:
         """Post-verification rollback: positions >= n_valid were rejected
-        drafts (or never written) — rewind so catch-up rewrites them."""
-        self.pos[slot] = min(self.pos[slot], n_valid)
+        drafts (or never written) — rewind so catch-up rewrites them.
+
+        KV layers need only the counter (stale rows above the horizon are
+        invisible until overwritten); recurrent layers hold ONE state that
+        the scan loop advanced past the rejection point, so it is restored
+        from the pre-scan snapshot (state at the old context length) and
+        catch-up replays the accepted tokens next round. Full acceptance
+        keeps the advanced state — the consumed tokens ARE the new context.
+        """
+        if self._rec and n_valid < self.pos[slot]:
+            if self._snap_pools is None:  # no snapshot (never proposed)
+                self.reset(slot)
+                return
+            self.pools = self._restore_fn(self.pools, self._snap_pools, slot)
+            self.pos[slot] = min(self._snap_base.get(slot, 0), n_valid)
+        else:
+            self.pos[slot] = min(self.pos[slot], n_valid)
 
     # -------------------------------------------------------------- proposal
     def propose(self, reqs: list[tuple[int, int, list[int], int, int]],
@@ -312,6 +358,37 @@ class DraftRunner:
             if self.pos[slot] < len(context):
                 pending.append([slot, list(context[self.pos[slot]:]),
                                 self.pos[slot]])
+        if self._rec:
+            # one multi-token row per slot per dispatch: recurrent state is
+            # gathered/scattered by slot, so the S=1 multi-row packing below
+            # (several rows of the SAME slot) would gather a stale h for
+            # every row after the first
+            Sc = self._catch_S
+            while pending:
+                slot_ids = np.zeros((self.slots,), np.int32)
+                pos = np.full((self.slots, Sc), -1, np.int32)
+                tok = np.zeros((self.slots, Sc), np.int32)
+                leftover = list(pending[self.slots:])
+                for row, (slot, toks, start) in enumerate(pending[: self.slots]):
+                    n = min(Sc, len(toks))
+                    slot_ids[row] = slot
+                    pos[row, :n] = np.arange(start, start + n)
+                    tok[row, :n] = toks[:n]
+                    if n < len(toks):
+                        leftover.append([slot, toks[n:], start + n])
+                with self.telemetry.annotate("draft_catchup"):
+                    self.pools, _, _ = self._catch_fn(
+                        self.params, self.pools, self._bt,
+                        jnp.asarray(slot_ids), jnp.asarray(pos),
+                        jnp.asarray(pos.max(axis=1) + 1), jnp.asarray(tok),
+                    )
+                self.steps += 1
+                self._c_steps.add()
+                pending = leftover
+            # snapshot for post-verification rollback: state at exactly
+            # len(context) consumed tokens per slot (see sync)
+            self._snap_pools = self.pools
+            self._snap_base = {slot: len(ctx) for _r, slot, ctx, _nt, _k in reqs}
         while pending:
             slot_ids = np.zeros((T,), np.int32)
             pos = np.full((T, 1), -1, np.int32)
@@ -331,7 +408,7 @@ class DraftRunner:
                     leftover.append([slot, toks[n:], start + n])
                 row += n
             with self.telemetry.annotate("draft_catchup"):
-                self.pools, _ = self._catch_fn(
+                self.pools, _, _ = self._catch_fn(
                     self.params, self.pools, self._bt, jnp.asarray(slot_ids),
                     jnp.asarray(pos), jnp.asarray(pos[:, 0] + 1),
                     jnp.asarray(tok),

@@ -1,0 +1,237 @@
+"""Per-layer cache policies (ISSUE 9): one packed scheduler serving
+paged-KV transformers, windowed-paged SWA stacks, and recurrent-state
+(Mamba / RG-LRU) stacks through the SAME jitted step.
+
+Covers the policy descriptors themselves (``cache_policies`` per family,
+``release_horizon`` / ``windowed_block_cap`` helpers), greedy token identity
+of the paged engine against the ring reference for every new family —
+including forced preemption, speculative decoding, both combined, and
+K-Means int4 quantized recurrent state — plus the per-policy resource
+accounting (recurrent layers pin zero blocks; prefix sharing auto-disables
+unless every layer is plain paged-KV; the engine widens ``seg_width`` so a
+recurrent + speculative stack fits one verify row).
+
+Ring references are only constructed where the ring fallback is exact:
+prompts no longer than the sliding window (one-shot ring prefill clobbers
+older keys past capacity) and equal-length prompts for recurrent stacks
+(the fixed-slot batcher's left-padding pollutes recurrent state — a
+documented fallback caveat, not a paged-path bug).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.model import build
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.paged_cache import (CachePolicy, release_horizon,
+                                       windowed_block_cap)
+from repro.serving.speculative import SpeculativeConfig
+
+FAMILIES = ["h2o_danube_1_8b", "recurrentgemma_2b", "falcon_mamba_7b"]
+
+
+@pytest.fixture(scope="module")
+def lm(request):
+    cfg = get_smoke_config(request.param)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n=3, length=11):
+    # <= sliding window and equal length: the regime where the ring
+    # fallback is an exact reference (see module docstring)
+    rng = np.random.RandomState(0)
+    return [list(rng.randint(1, cfg.vocab_size, size=length)) for _ in range(n)]
+
+
+def _ring(model, params, prompts, new, quantized=False):
+    sc = ServeConfig(cache_len=96, cache_dtype="float32",
+                     quantized=quantized, paged=False)
+    return ServingEngine(model, params, sc,
+                         batch_slots=len(prompts)).generate(prompts, new)
+
+
+# ---------------------------------------------------------------------------
+# policy descriptors
+# ---------------------------------------------------------------------------
+
+def test_cache_policies_per_family():
+    """Each family reports its layer stack; the helpers derive the release
+    horizon (0 unless every attention layer is windowed) and the live-block
+    cap for a windowed layer."""
+    kinds = {
+        "oasis_7b": {"paged_kv"},
+        "h2o_danube_1_8b": {"windowed_paged"},
+        "falcon_mamba_7b": {"recurrent"},
+        "recurrentgemma_2b": {"recurrent", "windowed_paged"},
+    }
+    for name, want in kinds.items():
+        cfg = get_smoke_config(name)
+        policies = build(cfg).cache_policies()
+        assert policies is not None and len(policies) == cfg.n_layers
+        assert {p.kind for p in policies} == want
+
+    full = [CachePolicy("paged_kv")]
+    swa = [CachePolicy("windowed_paged", window=16)]
+    rec = [CachePolicy("recurrent")]
+    assert release_horizon(full) == 0
+    assert release_horizon(full + swa) == 0  # a full-attn layer pins history
+    assert release_horizon(swa + rec) == 16
+    assert release_horizon(rec) == 0  # nothing paged: nothing to release
+    assert windowed_block_cap(16, 16) == 2  # partial head + partial tail
+    assert windowed_block_cap(17, 16) == 3
+
+
+# ---------------------------------------------------------------------------
+# engine identity: paged (per-layer policies) vs ring reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lm", FAMILIES, indirect=True)
+def test_paged_matches_ring_greedy(lm):
+    cfg, model, params = lm
+    prompts = _prompts(cfg)
+    ref = _ring(model, params, prompts, 24)
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=96, cache_dtype="float32", quantized=False,
+                    paged=True),
+        batch_slots=2)  # 3 prompts > 2 slots: exercises queueing too
+    assert eng.generate(prompts, 24) == ref
+    # recurrent layers cost zero blocks; windowed layers stay under the cap
+    peak = eng.stats["peak_live_blocks_per_seq"]
+    if all(p.kind == "recurrent" for p in model.cache_policies()):
+        assert peak == 0
+    elif any(p.kind == "windowed_paged" for p in model.cache_policies()):
+        assert peak <= windowed_block_cap(cfg.sliding_window, 16)
+
+
+@pytest.mark.parametrize("lm", ["h2o_danube_1_8b", "recurrentgemma_2b"],
+                         indirect=True)
+def test_paged_preemption_identity(lm):
+    """A pool small enough to force preemption mid-decode: restart replays
+    the committed tokens (attention blocks re-prefilled, recurrent state
+    rebuilt from scratch) and the output is still token-identical."""
+    cfg, model, params = lm
+    prompts = _prompts(cfg)
+    ref = _ring(model, params, prompts, 24)
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=96, cache_dtype="float32", quantized=False,
+                    paged=True, n_blocks=5, prefix_cache=False),
+        batch_slots=3)
+    assert eng.generate(prompts, 24) == ref
+    assert eng.stats["preemptions"] > 0, "pool was meant to force preemption"
+
+
+@pytest.mark.parametrize("lm", ["h2o_danube_1_8b", "recurrentgemma_2b"],
+                         indirect=True)
+def test_paged_speculative_identity(lm):
+    """Draft-propose / target-verify over per-layer policies: recurrent
+    verify rows scatter state at the last cell and the scheduler's
+    corrective commit rewinds to the acceptance point, so greedy output is
+    bit-identical — with and without a starved pool underneath."""
+    cfg, model, params = lm
+    prompts = _prompts(cfg)
+    ref = _ring(model, params, prompts, 24)
+    for extra in ({}, {"n_blocks": 5, "prefix_cache": False}):
+        eng = ServingEngine(
+            model, params,
+            ServeConfig(cache_len=96, cache_dtype="float32", quantized=False,
+                        paged=True, speculative=SpeculativeConfig(k=3),
+                        **extra),
+            batch_slots=3, draft=(model, params))
+        assert eng.generate(prompts, 24) == ref, extra
+
+
+@pytest.mark.parametrize("lm", ["falcon_mamba_7b", "recurrentgemma_2b"],
+                         indirect=True)
+def test_quantized_recurrent_state_identity(lm):
+    """K-Means int4 recurrent state: the per-token requantizing scan makes
+    state at position t a function of the token stream only, so ring decode
+    and packed multi-token rows agree bit-for-bit."""
+    cfg, model, params = lm
+    prompts = _prompts(cfg)
+    ref = _ring(model, params, prompts, 24, quantized=True)
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=96, cache_dtype="float32", quantized=True,
+                    paged=True),
+        batch_slots=3)
+    assert eng.generate(prompts, 24) == ref
+
+
+# ---------------------------------------------------------------------------
+# per-policy resource plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lm", ["falcon_mamba_7b"], indirect=True)
+def test_prefix_cache_disabled_unless_all_paged(lm):
+    """Prefix sharing is a paged-KV concept: asking for it on a stack with
+    any non-paged_kv layer silently serves without it (block hashes would
+    alias recurrent state that is NOT a pure function of the prefix
+    blocks)."""
+    cfg, model, params = lm
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=96, cache_dtype="float32", quantized=False,
+                    paged=True, prefix_cache=True),
+        batch_slots=2)
+    assert eng.scheduler.allocator.prefix_cache is False
+    prompts = _prompts(cfg)
+    assert eng.generate(prompts, 12) == _ring(model, params, prompts, 12)
+
+
+@pytest.mark.parametrize("lm", ["recurrentgemma_2b"], indirect=True)
+def test_seg_width_auto_bumped_for_recurrent_speculation(lm):
+    """Recurrent verify needs the k+1 cells of one request in ONE row (state
+    is sequential): the engine widens seg_width instead of failing."""
+    cfg, model, params = lm
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=96, cache_dtype="float32", quantized=False,
+                    paged=True, seg_width=1, speculative=SpeculativeConfig(k=3)),
+        batch_slots=2, draft=(model, params))
+    assert eng.sc.seg_width >= 4
+
+
+@pytest.mark.parametrize("lm", ["recurrentgemma_2b"], indirect=True)
+def test_recurrent_seg_width_prefill_identity(lm):
+    """seg_width > 1 without speculation: prefill packs multi-token rows
+    (one row per request per step for recurrent stacks — a slot's cells may
+    never split across rows), decode stays one cell per slot. Output is
+    token-identical to the ring reference."""
+    cfg, model, params = lm
+    prompts = _prompts(cfg)
+    ref = _ring(model, params, prompts, 16)
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=96, cache_dtype="float32", quantized=False,
+                    paged=True, seg_width=3),
+        batch_slots=2)
+    assert eng.generate(prompts, 16) == ref
+
+
+@pytest.mark.parametrize("lm", ["h2o_danube_1_8b"], indirect=True)
+def test_windowed_freed_blocks_are_reused(lm):
+    """Long decode past the window with a pool SMALLER than unreleased
+    demand finishes with zero preemptions: out-of-window blocks really
+    return to the allocator (the long-form version lives in
+    tests/test_long_decode.py)."""
+    cfg, model, params = lm
+    prompts = _prompts(cfg, n=2, length=8)
+    new = cfg.sliding_window * 3
+    ref = _ring(model, params, prompts, new)
+    cap = windowed_block_cap(cfg.sliding_window, 16)
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(cache_len=128, cache_dtype="float32", quantized=False,
+                    paged=True, n_blocks=2 * cap + 1, prefix_cache=False),
+        batch_slots=2)
+    assert eng.generate(prompts, new) == ref
+    assert eng.stats["preemptions"] == 0
+    assert eng.stats["peak_live_blocks_per_seq"] <= cap

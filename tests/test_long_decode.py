@@ -44,6 +44,49 @@ def test_decode_past_window_matches_full_forward(arch):
     np.testing.assert_allclose(incremental_last, full.logits[:, -1], rtol=2e-4, atol=2e-4)
 
 
+def test_swa_paged_long_decode_frees_blocks():
+    """Windowed-paged policy: decoding far past the sliding window keeps at
+    most ceil(window/block_size)+1 blocks live per sequence, and the freed
+    blocks are genuinely re-allocatable — the pool is sized BELOW what an
+    unreleased decode would need, so finishing without preemption proves
+    out-of-window blocks were recycled. Output stays token-identical to the
+    ring reference (prompt <= window, so the ring prefill is exact)."""
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    cfg = get_smoke_config("h2o_danube_1_8b")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    prompts = [list(rng.randint(1, cfg.vocab_size, size=8)) for _ in range(2)]
+    new = cfg.sliding_window * 6 + 4  # decode well past the window
+
+    ref = ServingEngine(
+        m, params,
+        ServeConfig(cache_len=256, cache_dtype="float32", quantized=False,
+                    paged=False),
+        batch_slots=2).generate(prompts, new)
+
+    bs = 16
+    cap = -(-cfg.sliding_window // bs) + 1  # partial head + partial tail
+    unreleased = -(-(8 + new) // bs)  # blocks one seq would pin without release
+    n_blocks = 2 * cap + 1
+    assert n_blocks < unreleased, "pool must be smaller than unreleased demand"
+    eng = ServingEngine(
+        m, params,
+        ServeConfig(cache_len=256, cache_dtype="float32", quantized=False,
+                    paged=True, block_size=bs, n_blocks=n_blocks,
+                    prefix_cache=False),
+        batch_slots=2)
+    out = eng.generate(prompts, new)
+    assert out == ref, "windowed-paged decode diverged from the ring reference"
+    st = eng.stats
+    assert st["peak_live_blocks_per_seq"] <= cap, st["peak_live_blocks_per_seq"]
+    assert st["preemptions"] == 0, (
+        "pool below unreleased demand forced preemption: freed blocks "
+        "were not re-allocatable"
+    )
+
+
 def test_chunked_ce_equals_plain_ce():
     """_chunked_ce (the big-vocab memory path) == direct softmax CE."""
     cfg = get_smoke_config("llama3_2_1b")

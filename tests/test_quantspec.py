@@ -1,8 +1,9 @@
 """QuantSpec API tests: per-layer rule resolution (later rules win, skip
 leaves a layer dense), config-in-params apply behaviour (comp_auto_tokens
 cutover), the quantized-model artifact layer (bit-exact save/load round trip,
-calibration-free load path), mixed-precision serving end-to-end, and the
-Model.quantize deprecation shim."""
+calibration-free load path), and mixed-precision serving end-to-end.
+``Model.quantize`` was a DeprecationWarning shim for one release; it is gone —
+``quantize_model(model, params, spec)`` is the only entry point."""
 
 import dataclasses
 
@@ -273,22 +274,15 @@ def test_serve_config_from_spec_kv_policy():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shim
+# deprecation shim retirement
 # ---------------------------------------------------------------------------
 
-def test_model_quantize_shim_warns_and_matches_spec(small_lm):
+def test_model_quantize_shim_is_retired(small_lm):
+    """The ``Model.quantize`` DeprecationWarning shim shipped for one release
+    and is now removed: the attribute must not exist (a leftover shim would
+    silently shadow the real entry point), and ``quantize_model`` remains the
+    way in."""
     cfg, model, params = small_lm
-    qcfg = QLinearConfig(detection="none")
-    with pytest.warns(DeprecationWarning, match="quantize_model"):
-        a = model.quantize(params, qcfg)
-    b = quantize_model(model, params, QuantSpec(base=qcfg))
-    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
-    assert len(fa) == len(fb)
-    for x, y in zip(fa, fb):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
-    # passing a QuantSpec through the old entry point forwards silently
-    import warnings
-
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        model.quantize(params, QuantSpec(base=qcfg))
+    assert not hasattr(model, "quantize")
+    qp = quantize_model(model, params, QuantSpec(base=QLinearConfig(detection="none")))
+    assert jax.tree.leaves(qp)
