@@ -56,13 +56,26 @@ A3+static), decode tokens/s per mode, and detect-route token identity
 (``detect_kernel`` jnp vs pallas) under prefix sharing + speculation with
 the kernel-dispatch and fallback counters asserted.
 
+A final **quality phase** (``run_quality_phase``) measures this PR's
+quantization-numerics observability: telemetry="quality" vs "metrics" wall
+time at the default 1/16 probe sampling (asserted <= 10% + 50 ms slack in
+full runs; smoke gates a looser 2.5x canary — CPU dispatch floors dominate
+the tiny trace),
+the acceptance-criterion gauges (per-site codebook utilization, SQNR,
+outlier-energy-captured, drift) populated on a probe-every-step engine,
+shadow-reference logit-KL observations recorded, and an induced-drift
+subphase: the same traffic served against calibration stats scale-shifted
+3x must move the drift gauge past alarm threshold while greedy tokens stay
+identical to a telemetry="off" engine.
+
 ``--smoke`` (or run(smoke=True)) shrinks all traces for CI; the smoke run
 still asserts ``prefix_hit_tokens > 0`` (the prefix-sharing CI gate),
 ``accepted_tokens > 0`` + speculative/baseline token-identity (the
 speculative gate), a non-empty engine TTFT histogram, that the trace
-artifact parses (the telemetry gates), and ``outlier_detect_calls > 0``
+artifact parses (the telemetry gates), ``outlier_detect_calls > 0``
 with zero fallbacks plus Orizuru-vs-lax.top_k token identity (the outlier
-gates).
+gates), and the quality gates above (gauges populated, >= 1 shadow KL
+observation, drift alarm on the shifted stats, token identity at quality).
 """
 
 from __future__ import annotations
@@ -358,6 +371,7 @@ def run(smoke: bool = False) -> None:
     run_speculative_phase(smoke)
     run_outlier_phase(smoke)
     run_heterogeneous_phase(smoke)
+    run_quality_phase(smoke)
 
 
 def run_heterogeneous_phase(smoke: bool) -> None:
@@ -780,6 +794,169 @@ def run_outlier_phase(smoke: bool) -> None:
                    "route_trace_requests": n_shared, "slots": SLOTS,
                    "prefix_sharing": True, "speculative_k": 2,
                    "a3_bits": 3, "detect_routes": ["jnp", "pallas"]})
+
+
+def run_quality_phase(smoke: bool) -> None:
+    """Quantization-numerics observability on the serving path (this PR).
+
+    Four measurements on the TRAINED byte-LM, quantized W4/A4 + dynamic
+    Orizuru outliers (so every probe family has something to measure):
+
+    1. **Overhead** — the same decode trace served at telemetry="metrics"
+       vs "quality" at the DEFAULT 1/16 probe sampling, interleaved, 3 reps,
+       best pass each. Asserted: quality <= metrics * 1.10 + 50 ms — the
+       probes ride a separately-jitted sampled step, so the budget is one
+       extra (unrolled) forward every 16 steps plus host-side ingestion.
+    2. **Gauge population** (the --smoke CI gates) — a probe-every-step
+       engine (sample_every=1, shadow_every=4, calibration stats captured
+       from the model itself) must populate per-site codebook-utilization /
+       SQNR / outlier-energy-captured / drift gauges and record >= 1
+       shadow-reference logit-KL observation.
+    3. **Induced drift** — the SAME traffic served against calibration
+       stats scale-shifted 3x (live activations then sit ~3x off the
+       recorded distribution): the drift gauge must move past the control
+       engine and the 0.5 alarm threshold, and the alarm counter must fire.
+    4. **Token identity** — the drifted quality engine (probing EVERY step,
+       i.e. maximal exposure of the unrolled probed path) must produce
+       greedy tokens identical to a telemetry="off" engine: observation
+       never perturbs serving numerics.
+    """
+    from benchmarks.common import capture_activations, trained_lm
+    from repro.core import numerics as nx
+    from repro.serving.telemetry import TelemetryConfig
+
+    cfg, model, params, corpus = trained_lm(300 if smoke else 800)
+    spec = QuantSpec(base=QLinearConfig(detection="dynamic", outlier_frac=0.005),
+                     kv_dtype="float32")
+    calib = capture_activations(model, params, corpus)
+    qparams = quantize_model(model, params, spec, calib=calib)
+    calib_stats = {t: nx.activation_stats(a) for t, a in calib.items()}
+
+    n_req = 4 if smoke else 10
+    budget_range = (12, 24) if smoke else (24, 48)
+    rng = np.random.RandomState(23)
+    crops = rng.randint(0, len(corpus.tokens) - 24, n_req)
+    traces = [Trace(list(map(int, corpus.tokens[c:c + int(rng.randint(8, 20))])),
+                    int(rng.randint(*budget_range)), float(t))
+              for c, t in zip(crops, np.cumsum(rng.exponential(0.03, n_req)))]
+    cache_len = 24 + budget_range[1] + 16
+    mk = lambda tel, **kw: ServingEngine(
+        model, qparams,
+        ServeConfig.from_spec(spec, cache_len=cache_len, block_size=16,
+                              prefill_chunk=32, telemetry=tel),
+        batch_slots=SLOTS, **kw)
+
+    # ---- 1. overhead at the default 1/16 sampling --------------------------
+    engines = {"metrics": mk("metrics"), "quality": mk("quality")}
+    for eng in engines.values():  # warm: compiles the probed step too (step 0)
+        eng.generate([traces[0].prompt] * 2, max_new_tokens=2)
+    times = {k: [] for k in engines}
+    for _rep in range(3):
+        for level, eng in engines.items():
+            eng.telemetry.reset()
+            t0 = time.perf_counter()
+            for t in traces:
+                eng.scheduler.submit(t.prompt, t.budget)
+            eng.scheduler.run()
+            times[level].append(time.perf_counter() - t0)
+    times = {k: min(v) for k, v in times.items()}
+    overhead = (times["quality"] - times["metrics"]) / times["metrics"]
+    # the probed step costs ~one extra forward, so 1/16 sampling amortizes
+    # to <10% wherever compute dominates dispatch (accelerators / full runs).
+    # CPU smoke steps are a few ms of host dispatch each, so the extra
+    # UNROLLED forward's dispatch floor dominates — gate smoke loosely as a
+    # regression canary (catches probe-every-step / recompile-per-step bugs)
+    # and hold the 10% contract in full runs.
+    limit = 2.5 if smoke else 1.10
+    assert times["quality"] <= times["metrics"] * limit + 0.05, (
+        f"quality probes cost too much at 1/16 sampling: "
+        f"{times['quality']:.3f}s vs metrics {times['metrics']:.3f}s "
+        f"({overhead * 100:+.1f}%, limit {limit:.0%})")
+    print(f"quality_overhead,-,-,-,quality={times['quality']:.3f}s "
+          f"metrics={times['metrics']:.3f}s overhead={overhead * 100:+.1f}% "
+          f"(sample_every=16, smoke_limit={smoke})")
+
+    # ---- 2 + 3 + 4: gauges / induced drift / token identity ----------------
+    qtel = lambda: TelemetryConfig(level="quality", quality_sample_every=1,
+                                   quality_shadow_every=4)
+    shifted_stats = {
+        t: {**st, "mean": st["mean"] / 3.0, "rms": st["rms"] / 3.0,
+            "absmax_mean": st["absmax_mean"] / 3.0,
+            "absmax_q50": st["absmax_q50"] / 3.0,
+            "absmax_q99": st["absmax_q99"] / 3.0,
+            "absmax_max": st["absmax_max"] / 3.0}
+        for t, st in calib_stats.items()}
+    runs = {}
+    for name, tel, cs in (("off", "off", None),
+                          ("control", qtel(), calib_stats),
+                          ("drifted", qtel(), shifted_stats)):
+        eng = mk(tel, calib_stats=cs)
+        for t in traces:
+            eng.scheduler.submit(t.prompt, t.budget)
+        runs[name] = (eng, eng.scheduler.run())
+    assert runs["drifted"][1] == runs["off"][1] == runs["control"][1], \
+        "quality probes changed greedy serving outputs vs telemetry=off"
+
+    snap = runs["control"][0].snapshot()
+    g = snap["gauges"]
+    util = [v for k, v in g.items()
+            if k.startswith("numerics_a_codebook_util.")]
+    sqnr = [v for k, v in g.items() if k.startswith("numerics_sqnr_db.")]
+    oe = [v for k, v in g.items()
+          if k.startswith("numerics_outlier_energy_captured.")]
+    drift_g = [v for k, v in g.items() if k.startswith("numerics_drift.")]
+    assert util and all(0.0 < v <= 1.0 for v in util), \
+        f"codebook-utilization gauges missing/out of range ({len(util)} sites)"
+    assert sqnr and max(sqnr) > 0.0, "per-site SQNR gauges not populated"
+    assert oe and max(oe) > 0.0, \
+        "outlier-energy-captured gauges not populated (dynamic detection on)"
+    assert drift_g, "per-site drift gauges not populated"
+    kl = snap["histograms"]["numerics_shadow_logit_kl"]
+    assert kl["count"] >= 1, "shadow probe recorded no logit-KL observation"
+
+    dsnap = runs["drifted"][0].snapshot()
+    d_ctl = g.get("numerics_drift_max", 0.0)
+    d_drift = dsnap["gauges"].get("numerics_drift_max", 0.0)
+    alarms = dsnap["counters"].get("numerics_drift_alarms", 0)
+    assert d_drift > max(1.0, d_ctl), (
+        f"3x-shifted calibration stats must move the drift gauge: "
+        f"drifted {d_drift:.2f} vs control {d_ctl:.2f}")
+    assert alarms > 0, "induced drift raised no alarm"
+    print(f"quality_gauges,-,-,-,sites={len(util)} "
+          f"mean_util={sum(util) / len(util):.2f} "
+          f"mean_sqnr={sum(sqnr) / len(sqnr):.1f}dB "
+          f"outlier_energy_max={max(oe):.3f} shadow_kl_n={kl['count']} "
+          f"top1={g.get('numerics_shadow_top1_agreement', -1):.2f}")
+    print(f"quality_drift,-,-,-,control_max={d_ctl:.2f} "
+          f"drifted_max={d_drift:.2f} alarms={alarms} token_identical=True")
+    emit("serving_quality_overhead", 0.0,
+         f"quality {times['quality']:.3f}s vs metrics {times['metrics']:.3f}s "
+         f"({overhead * 100:+.1f}% at 1/16 sampling)")
+    emit("serving_quality_drift", 0.0,
+         f"induced 3x drift: gauge {d_drift:.2f} (control {d_ctl:.2f}), "
+         f"{alarms} alarms, greedy tokens identical to telemetry=off")
+    record("serving_quality",
+           wall_s_quality=round(times["quality"], 4),
+           wall_s_metrics=round(times["metrics"], 4),
+           overhead_pct=round(overhead * 100, 2),
+           probed_sites=len(util),
+           mean_codebook_util=round(sum(util) / len(util), 4),
+           mean_sqnr_db=round(sum(sqnr) / len(sqnr), 2),
+           outlier_energy_max=round(max(oe), 4),
+           shadow_kl_count=kl["count"],
+           shadow_kl_p50=round(kl.get("p50", 0.0), 8),
+           shadow_top1_agreement=g.get("numerics_shadow_top1_agreement"),
+           shadow_token_agreement=g.get("numerics_shadow_token_agreement"),
+           drift_max_control=round(d_ctl, 4),
+           drift_max_drifted=round(d_drift, 4),
+           drift_alarms_control=snap["counters"].get("numerics_drift_alarms", 0),
+           drift_alarms_drifted=alarms,
+           token_identical_vs_off=True,
+           config={"smoke": smoke, "n_requests": n_req,
+                   "budget_range": list(budget_range), "slots": SLOTS,
+                   "sample_every_overhead": 16, "sample_every_gates": 1,
+                   "shadow_every_gates": 4, "drift_shift": 3.0,
+                   "detection": "dynamic", "outlier_frac": 0.005})
 
 
 if __name__ == "__main__":

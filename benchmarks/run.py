@@ -5,7 +5,12 @@ AND, per module, a machine-readable ``BENCH_<name>.json`` in the repo root
 (status, elapsed, every ``common.emit``/``common.record`` result) so the
 perf trajectory is tracked across PRs instead of living in scrollback.
 
-Run: PYTHONPATH=src python -m benchmarks.run [module ...]
+Run: PYTHONPATH=src python -m benchmarks.run [module ...] [--summary]
+
+``--summary`` (after the selected modules run — or alone, to merge results
+from earlier runs) collects every ``BENCH_*.json`` in the repo root into one
+``BENCH_summary.json``: per-module status/elapsed plus all records, keyed by
+module name.
 """
 
 from __future__ import annotations
@@ -54,10 +59,44 @@ def _write_result(name: str, ok: bool, elapsed: float, records: list[dict],
     (ROOT / f"BENCH_{name}.json").write_text(json.dumps(payload, indent=1))
 
 
+def write_summary() -> pathlib.Path:
+    """Merge every BENCH_<module>.json in the repo root into
+    BENCH_summary.json (status/elapsed per module + all records)."""
+    modules = {}
+    for p in sorted(ROOT.glob("BENCH_*.json")):
+        if p.name == "BENCH_summary.json":
+            continue
+        try:
+            d = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError):
+            continue
+        modules[d.get("module", p.stem[len("BENCH_"):])] = {
+            "ok": d.get("ok"),
+            "elapsed_s": d.get("elapsed_s"),
+            "n_records": len(d.get("records", [])),
+            "records": d.get("records", []),
+            **({"error": d["error"]} if "error" in d else {}),
+        }
+    out = ROOT / "BENCH_summary.json"
+    out.write_text(json.dumps({
+        "modules": modules,
+        "n_modules": len(modules),
+        "all_ok": all(m["ok"] for m in modules.values()) if modules else False,
+    }, indent=1))
+    return out
+
+
 def main() -> None:
     from benchmarks import common
 
-    only = set(sys.argv[1:])
+    argv = sys.argv[1:]
+    summary = "--summary" in argv
+    only = {a for a in argv if not a.startswith("-")}
+    if summary and not only:  # merge-only invocation: no modules re-run
+        out = write_summary()
+        print(f"merged {json.loads(out.read_text())['n_modules']} module "
+              f"results -> {out.name}")
+        return
     failures = []
     for name in MODULES:
         if only and name not in only:
@@ -76,6 +115,9 @@ def main() -> None:
             _write_result(name, False, time.time() - t0, list(common.RECORDS),
                           error=traceback.format_exc(limit=5))
             traceback.print_exc()
+    if summary:
+        out = write_summary()
+        print(f"\nmerged BENCH_*.json -> {out.name}")
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
         sys.exit(1)

@@ -15,11 +15,18 @@ its W4 guard), save it as a second artifact, and re-serve the prompts with
 draft-propose / target-verify speculative decoding: token-identical output,
 several tokens committed per target step (acceptance rate printed).
 
+Pass ``--telemetry quality`` to additionally run the quantization-numerics
+probes (codebook utilization / SQNR / outlier-energy gauges, calibration
+drift, shadow-reference logit KL; see ``repro.core.numerics``), and
+``--metrics-json PATH`` to dump the final metric snapshot as JSON (with a
+Prometheus text rendering alongside it under the ``"expfmt"`` key).
+
 Run: PYTHONPATH=src python examples/serve_quantized.py [--steps 200]
-     [--smoke] [--speculative]
+     [--smoke] [--speculative] [--telemetry quality] [--metrics-json out.json]
 """
 
 import argparse
+import json
 import sys
 import tempfile
 
@@ -27,7 +34,7 @@ import jax
 
 from repro.configs.base import get_smoke_config
 from repro.core import QLinearConfig, QuantSpec, quantize_model
-from repro.core.artifact import load_quantized, save_quantized
+from repro.core.artifact import load_calib_stats, load_quantized, save_quantized
 from repro.data.pipeline import ByteCorpus, DataConfig, TokenPipeline
 from repro.models.model import build
 from repro.optim.adamw import AdamWConfig
@@ -44,8 +51,22 @@ def main() -> None:
     ap.add_argument("--config", default="oasis_7b",
                     help="smoke config to serve (e.g. oasis_7b, "
                          "h2o_danube_1_8b, recurrentgemma_2b, falcon_mamba_7b)")
+    ap.add_argument("--telemetry", default="metrics",
+                    choices=["off", "metrics", "trace", "quality"],
+                    help="telemetry level ('quality' adds numerics probes)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the final telemetry snapshot (JSON) + "
+                         "Prometheus text rendering to PATH")
     args = ap.parse_args()
     steps = 30 if args.smoke else args.steps
+    telemetry = args.telemetry
+    if telemetry == "quality":
+        # default cadences (16/32) are tuned for long-running servers; this
+        # example serves ~30 packed steps, so sample tighter to populate
+        # every gauge and land >= 1 shadow probe
+        from repro.serving.telemetry import TelemetryConfig
+        telemetry = TelemetryConfig(level="quality", quality_sample_every=4,
+                                    quality_shadow_every=8)
 
     cfg = get_smoke_config(args.config)
     model = build(cfg)
@@ -80,8 +101,9 @@ def main() -> None:
             served_model,
             served_params,
             ServeConfig.from_spec(served_spec, cache_len=128, block_size=16,
-                                  prefill_chunk=16),
+                                  prefill_chunk=16, telemetry=telemetry),
             batch_slots=4,
+            calib_stats=load_calib_stats(artifact_dir),
         )
         prompts_text = ["def quantize(", "import jax", "class Model", "# The paper",
                         "return x @ w"]
@@ -111,6 +133,17 @@ def main() -> None:
                   f"step split host {steps['host_s']['mean'] * 1e3:.1f} ms / "
                   f"device {steps['device_s']['mean'] * 1e3:.1f} ms, "
                   f"mean budget util {steps['util']['mean']:.0%}")
+            if args.telemetry == "quality":
+                g = snap.get("gauges", {})
+                utils = [v for k, v in g.items()
+                         if k.startswith("numerics_a_codebook_util.")]
+                sqnrs = [v for k, v in g.items()
+                         if k.startswith("numerics_sqnr_db.")]
+                print(f"   quality: {len(utils)} probed sites, "
+                      f"mean codebook util {sum(utils) / max(len(utils), 1):.0%}, "
+                      f"mean SQNR {sum(sqnrs) / max(len(sqnrs), 1):.1f} dB, "
+                      f"drift alarms "
+                      f"{snap.get('counters', {}).get('numerics_drift_alarms', 0)}")
 
         if args.speculative:
             from repro.serving.speculative import (DEFAULT_DRAFT_SPEC,
@@ -140,6 +173,14 @@ def main() -> None:
                   f"({st['accepted_tokens']}/{st['drafted_tokens']} drafts, "
                   f"{st['rolled_back_tokens']} rolled back, "
                   f"{st['draft_steps']} draft dispatches)")
+
+        if args.metrics_json:
+            dump = engine.snapshot()
+            dump["expfmt"] = engine.telemetry.expfmt()
+            with open(args.metrics_json, "w") as f:
+                json.dump(dump, f, indent=1, default=float)
+            print(f"== metrics snapshot -> {args.metrics_json} "
+                  f"(JSON + Prometheus text under 'expfmt')")
     print("OK (QuantSpec-quantized artifact saved, reloaded, and served: "
           "W4/W8 weights + A4 activations + int4 paged KV, continuous batching"
           + (", speculative decoding verified" if args.speculative else "") + ")")

@@ -22,7 +22,19 @@ from repro.core.outlier import (
     outlier_residuals,
     static_thresholds,
 )
-from repro.core.artifact import QuantizedArtifact, load_quantized, save_quantized
+from repro.core.artifact import (
+    QuantizedArtifact,
+    load_calib_stats,
+    load_quantized,
+    save_quantized,
+)
+from repro.core.numerics import (
+    QualityMonitor,
+    activation_stats,
+    drift_score,
+    probe_qlinear,
+)
+from repro.core.numerics import collect as collect_probes
 from repro.core.qlinear import QLinearConfig, QLinearParams, qlinear_apply, quantize_linear
 from repro.core.quantize import (
     QuantizedActivation,

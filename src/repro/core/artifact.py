@@ -38,7 +38,8 @@ from repro.core.qlinear import QLinearParams
 from repro.core.quantize import QuantizedWeight
 from repro.core.quantspec import QuantSpec, _cfg_from_json, _cfg_to_json
 
-__all__ = ["save_quantized", "load_quantized", "QuantizedArtifact", "FORMAT_VERSION"]
+__all__ = ["save_quantized", "load_quantized", "load_calib_stats",
+           "QuantizedArtifact", "FORMAT_VERSION"]
 
 FORMAT_VERSION = 1
 
@@ -132,8 +133,15 @@ def _unflatten(node: dict, tensors: dict[str, jnp.ndarray]):
 # ---------------------------------------------------------------------------
 
 def save_quantized(directory: str, model_cfg: ModelConfig, spec: QuantSpec,
-                   qparams: dict) -> pathlib.Path:
-    """Persist a quantized model; returns the artifact directory."""
+                   qparams: dict, calib_stats: dict | None = None) -> pathlib.Path:
+    """Persist a quantized model; returns the artifact directory.
+
+    ``calib_stats``: optional per-tap calibration-time activation statistics
+    for live drift detection (``core/numerics``) — ``{tap_name: stats}``
+    where ``stats`` is either the dict :func:`repro.core.numerics.
+    activation_stats` returns, or the raw (tokens, K) calibration activations
+    (summarized here). Stored in the manifest; serving reads it back with
+    :func:`load_calib_stats`."""
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     # invalidate any PREVIOUS save first: a stale manifest paired with new
@@ -159,12 +167,30 @@ def save_quantized(directory: str, model_cfg: ModelConfig, spec: QuantSpec,
             for k, v in tensors.items()
         },
     }
+    if calib_stats:
+        from repro.core import numerics  # late: artifact stays import-light
+
+        manifest["calib_stats"] = {
+            tap: (dict(st) if isinstance(st, dict)
+                  else numerics.activation_stats(st))
+            for tap, st in calib_stats.items()
+        }
     # manifest LAST, via rename so it appears atomically (crash -> no manifest
     # -> load_quantized refuses the incomplete directory)
     tmp = d / ".manifest.json.tmp"
     tmp.write_text(json.dumps(manifest, indent=1))
     tmp.replace(d / "manifest.json")
     return d
+
+
+def load_calib_stats(directory: str) -> dict | None:
+    """Per-tap calibration activation stats from an artifact manifest, or
+    None for artifacts saved without them (every pre-quality artifact — the
+    scheduler then self-baselines drift from the first probed step)."""
+    mf = pathlib.Path(directory) / "manifest.json"
+    if not mf.exists():
+        raise FileNotFoundError(f"{directory} has no manifest.json")
+    return json.loads(mf.read_text()).get("calib_stats")
 
 
 def load_quantized(directory: str, verify: bool = True) -> QuantizedArtifact:

@@ -1,0 +1,425 @@
+"""Quantization-numerics observability: quant-health probes + drift detection.
+
+The serving stack's telemetry (serving/telemetry.py) observes *performance*;
+this module observes the *numerics* of the paper's K-Means quantization on
+live traffic — the failure modes per-layer sensitivity analyses (KVQuant) and
+outlier-aware dual-side quantization (OASIS) show dominate low-bit accuracy:
+
+* **codebook health** — index utilization histograms, dead-centroid counts,
+  and normalized index entropy for weight AND activation codebooks, plus the
+  activation saturation rate against the codebook range;
+* **per-layer SQNR** — signal-to-quantization-noise of the main branch
+  (pre-compensation), in dB;
+* **Orizuru effectiveness** — fraction of the pre-quantization tensor energy
+  captured by the detected top-k outliers, and overlap of the detected
+  channel set with exact ``lax.top_k`` under the dynamic route;
+* **calibration drift** — live per-layer activation stats compared against
+  calibration-time stats persisted in the artifact manifest
+  (``core/artifact.py``), scored into per-layer drift gauges and an alarm
+  counter wired through ``distributed/fault_tolerance.StepMonitor``.
+
+Collection mechanism mirrors ``core/calibration``'s capture contextvar, but
+for TRACED code: :func:`collect` installs a :class:`ProbeCollector`;
+``qlinear_apply`` then emits device-side probe stats (pure jnp reductions on
+the tensors it already has) into the collector, which the probed packed step
+returns as an extra jit output. Outside :func:`collect` every hook is a
+zero-cost no-op — the traced path is byte-identical, which is what keeps the
+``off``/``metrics``/``trace`` telemetry levels jaxpr-identical to a build
+without this module (asserted in tests/test_numerics.py). The probe flag is
+therefore *jit-static*: whether a collector is active at trace time decides
+which jaxpr is built; the ``quality`` telemetry level is the only one that
+traces with a collector installed.
+
+Every probe reduction here has a trivially checkable numpy oracle
+(tests/test_numerics.py asserts bit-equality for the integer stats and tight
+allclose for the float ones).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.quantize as qz
+
+__all__ = [
+    "ProbeCollector", "collect", "collecting", "announce", "probe_qlinear",
+    "index_stats", "saturation_rate", "sqnr_db", "outlier_energy_fraction",
+    "topk_overlap", "activation_moments", "activation_stats", "drift_score",
+    "QualityMonitor", "site_tap",
+]
+
+_EPS = 1e-12
+
+_COLLECT: contextvars.ContextVar["ProbeCollector | None"] = contextvars.ContextVar(
+    "repro_numerics_collect", default=None
+)
+
+
+# ---------------------------------------------------------------------------
+# collection context (trace-time; mirrors calibration._CAPTURE)
+# ---------------------------------------------------------------------------
+
+class ProbeCollector:
+    """Accumulates per-projection probe stats during ONE (traced) forward.
+
+    ``mask``: optional token-validity weights broadcastable to each
+    activation's leading (token) dims — the packed serving grid passes
+    ``positions >= 0`` so padded cells contribute exactly zero to every stat.
+    ``out`` maps ``"<site>/<stat>"`` to (traced) scalars or small arrays;
+    sites are ``"<NNN>.<tap>"`` in forward order (``announce`` numbers them),
+    so a scan-unrolled model gets one site per layer per projection.
+    """
+
+    def __init__(self, mask=None):
+        self.mask = mask
+        self.out: dict[str, jax.Array] = {}
+        self._site: str | None = None
+        self._n = 0
+
+    def announce(self, tap: str) -> None:
+        self._site = f"{self._n:03d}.{tap}"
+        self._n += 1
+
+    def site(self) -> str:
+        if self._site is None:  # direct qlinear_apply call (no dense_apply tap)
+            self._site = f"{self._n:03d}.proj"
+            self._n += 1
+        return self._site
+
+    def emit(self, stats: dict) -> None:
+        site = self.site()
+        for k, v in stats.items():
+            self.out[f"{site}/{k}"] = v
+        self._site = None  # one emit per announce
+
+
+def collecting() -> bool:
+    """True iff a probe collector is active (jit-static: decided at trace)."""
+    return _COLLECT.get() is not None
+
+
+@contextlib.contextmanager
+def collect(mask=None):
+    """Install a :class:`ProbeCollector` for the enclosed forward; yields it.
+    Safe inside a traced function — the stats it accumulates are tracers the
+    caller returns as jit outputs."""
+    col = ProbeCollector(mask=mask)
+    token = _COLLECT.set(col)
+    try:
+        yield col
+    finally:
+        _COLLECT.reset(token)
+
+
+def announce(tap: str | None) -> None:
+    """Name the NEXT probed projection (called by ``dense_apply`` with its
+    calibration tap name). No-op outside :func:`collect` — and therefore
+    invisible to the jaxpr of every non-quality build."""
+    col = _COLLECT.get()
+    if col is not None and tap is not None:
+        col.announce(tap)
+
+
+# ---------------------------------------------------------------------------
+# pure probe reductions (device-side; each has a numpy oracle in tests)
+# ---------------------------------------------------------------------------
+
+def _token_weights(x: jax.Array, mask) -> jax.Array:
+    """(leading token dims,) f32 validity weights for ``x`` (..., K)."""
+    if mask is None:
+        return jnp.ones(x.shape[:-1], jnp.float32)
+    return jnp.broadcast_to(mask, x.shape[:-1]).astype(jnp.float32)
+
+
+def index_stats(idx: jax.Array, n_bins: int, weights=None) -> dict:
+    """Codebook-index health: occupancy histogram + derived gauges.
+
+    ``weights``: optional per-element 0/1 weights (masked tokens drop out).
+    Returns hist (n_bins,) f32 exact counts, util = fraction of bins hit,
+    dead = bins never hit, entropy = index entropy normalized to [0, 1]
+    (1 = uniform use of all 2^n centroids, 0 = single-centroid collapse).
+    """
+    from repro.kernels import ops as kops
+
+    hist = kops.index_histogram(idx, n_bins, weights=weights)
+    total = jnp.maximum(hist.sum(), _EPS)
+    p = hist / total
+    ent = -jnp.sum(p * jnp.log(jnp.maximum(p, _EPS)))
+    norm = math.log(n_bins) if n_bins > 1 else 1.0
+    return {
+        "hist": hist,
+        "util": (hist > 0).mean(),
+        "dead": (hist == 0).sum().astype(jnp.float32),
+        "entropy": (ent / norm).astype(jnp.float32),
+    }
+
+
+def saturation_rate(x: jax.Array, codebook: jax.Array,
+                    scale_mode: str = "rms", mask=None) -> jax.Array:
+    """Fraction of (masked) elements whose normalized value x/s falls outside
+    the codebook's centroid range — the share of the tensor the codebook
+    cannot represent without clipping to an extreme centroid."""
+    wm = _token_weights(x, mask)
+    xf = x.astype(jnp.float32)
+    s = qz.token_scale(x, scale_mode)
+    xn = xf / s
+    book = codebook.astype(jnp.float32)
+    sat = ((xn < book[0]) | (xn > book[-1])).astype(jnp.float32)
+    denom = jnp.maximum(wm.sum() * x.shape[-1], _EPS)
+    return (sat * wm[..., None]).sum() / denom
+
+
+def sqnr_db(x: jax.Array, qa: qz.QuantizedActivation, mask=None) -> jax.Array:
+    """Main-branch signal-to-quantization-noise ratio in dB (before outlier
+    compensation): 10 log10(sum x^2 / sum (x - q(x))^2) over masked tokens."""
+    wm = _token_weights(x, mask)[..., None]
+    xf = x.astype(jnp.float32)
+    err = xf - qz.dequantize_activation(qa)
+    sig = (jnp.square(xf) * wm).sum()
+    noise = jnp.maximum((jnp.square(err) * wm).sum(), _EPS)
+    return (10.0 * jnp.log10(jnp.maximum(sig, _EPS) / noise)).astype(jnp.float32)
+
+
+def outlier_energy_fraction(x: jax.Array, outs, mask=None) -> jax.Array:
+    """Orizuru effectiveness: fraction of the pre-quantization tensor energy
+    sitting in the detected top-k channels (paper budget: 0.5% + 0.5% per
+    side should carry the heavy tails — this gauge says whether it does)."""
+    wm = _token_weights(x, mask)
+    xf = x.astype(jnp.float32)
+    total = jnp.maximum((jnp.square(xf) * wm[..., None]).sum(), _EPS)
+    captured = (jnp.square(outs.values) * outs.mask * wm[..., None]).sum()
+    return (captured / total).astype(jnp.float32)
+
+
+def topk_overlap(outs, x: jax.Array, k: int, mask=None) -> jax.Array:
+    """Mean per-token overlap |detected ∩ exact lax.top_k| / 2k between the
+    routed detector's channel set and the exact dual top-k — 1.0 when the
+    detection kernel honours its bit-identity contract."""
+    from repro.core import outlier as ol
+
+    exact = ol.detect_outliers_topk(x.astype(jnp.float32), k)
+    hit = (outs.channels[..., :, None] == exact.channels[..., None, :]).any(-1)
+    wm = _token_weights(x, mask)
+    per_tok = hit.astype(jnp.float32).mean(-1)
+    return ((per_tok * wm).sum() / jnp.maximum(wm.sum(), _EPS)).astype(jnp.float32)
+
+
+def activation_moments(x: jax.Array, mask=None) -> dict:
+    """Live activation stats in the same vocabulary as the calibration-time
+    :func:`activation_stats` (mask-weighted): mean, rms, mean/max per-token
+    absmax, and the effective token count."""
+    wm = _token_weights(x, mask)
+    xf = x.astype(jnp.float32)
+    n_el = jnp.maximum(wm.sum() * x.shape[-1], _EPS)
+    am = jnp.max(jnp.abs(xf), axis=-1)  # per token
+    n_tok = jnp.maximum(wm.sum(), _EPS)
+    return {
+        "act_mean": (xf * wm[..., None]).sum() / n_el,
+        "act_rms": jnp.sqrt((jnp.square(xf) * wm[..., None]).sum() / n_el),
+        "act_absmax_mean": (am * wm).sum() / n_tok,
+        "act_absmax_max": jnp.max(am * wm),
+        "act_tokens": wm.sum(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the qlinear_apply hook (active only under collect())
+# ---------------------------------------------------------------------------
+
+def probe_qlinear(p, x: jax.Array, *, qa, outs, k_out: int, dynamic: bool,
+                  scale_mode: str, tier: str) -> None:
+    """Emit one projection's quant-health probes into the active collector.
+
+    Called from ``qlinear_apply`` AFTER both branches ran, with whatever
+    intermediates the routed path produced: ``qa`` may be None on the fused
+    Pallas route (indices never left VMEM) — the probe recomputes it, which
+    is extra work the ``quality`` level explicitly accepts; ``outs`` is None
+    when the outlier branch is off. The layer's output is never touched.
+    """
+    col = _COLLECT.get()
+    if col is None:
+        return
+    mask = col.mask
+    if qa is None:
+        qa = qz.quantize_activation(x, p.act_codebook, scale_mode)
+    wm_el = _token_weights(x, mask)[..., None]
+    n_act = p.act_codebook.shape[0]
+    a = index_stats(qa.idx, n_act,
+                    weights=jnp.broadcast_to(wm_el, qa.idx.shape))
+    w = index_stats(p.qw.indices, p.qw.codebook.shape[0])
+    stats = {
+        "a_hist": a["hist"], "a_util": a["util"], "a_dead": a["dead"],
+        "a_entropy": a["entropy"],
+        "a_sat": saturation_rate(x, p.act_codebook, scale_mode, mask),
+        "sqnr_db": sqnr_db(x, qa, mask),
+        "w_hist": w["hist"], "w_util": w["util"], "w_dead": w["dead"],
+        "w_entropy": w["entropy"],
+        **activation_moments(x, mask),
+    }
+    if outs is not None and k_out > 0:
+        stats["out_energy"] = outlier_energy_fraction(x, outs, mask)
+        if dynamic:
+            stats["out_overlap"] = topk_overlap(outs, x, k_out, mask)
+    col.emit(stats)
+
+
+# ---------------------------------------------------------------------------
+# calibration-time stats + drift scoring (host-side)
+# ---------------------------------------------------------------------------
+
+def activation_stats(acts) -> dict:
+    """Summary stats of a (tokens, K) calibration-activation tensor, in the
+    JSON vocabulary the artifact manifest persists (``save_quantized``'s
+    ``calib_stats``): mean/rms plus per-token absmax quantiles."""
+    x = np.asarray(jax.device_get(acts), np.float32)
+    x = x.reshape(-1, x.shape[-1])
+    am = np.max(np.abs(x), axis=-1)
+    return {
+        "mean": float(x.mean()),
+        "rms": float(np.sqrt(np.mean(np.square(x)))),
+        "absmax_mean": float(am.mean()),
+        "absmax_q50": float(np.quantile(am, 0.5)),
+        "absmax_q99": float(np.quantile(am, 0.99)),
+        "absmax_max": float(am.max()),
+        "tokens": int(x.shape[0]),
+        "dim": int(x.shape[1]),
+    }
+
+
+def drift_score(live: dict, calib: dict) -> float:
+    """Scale-free distance between live and calibration activation stats:
+    the worst of the mean / rms / absmax-mean shifts, each normalized by the
+    calibration scale (rms for the central stats, absmax_mean for the tail).
+    0 = distributions agree; ~1 = shifted by a full calibration scale."""
+    rms_c = max(abs(float(calib.get("rms", 0.0))), 1e-6)
+    am_c = max(abs(float(calib.get("absmax_mean", rms_c))), 1e-6)
+    return max(
+        abs(float(live.get("mean", 0.0)) - float(calib.get("mean", 0.0))) / rms_c,
+        abs(float(live.get("rms", 0.0)) - float(calib.get("rms", 0.0))) / rms_c,
+        abs(float(live.get("absmax_mean", 0.0))
+            - float(calib.get("absmax_mean", 0.0))) / am_c,
+    )
+
+
+def site_tap(site: str) -> str:
+    """``"003.attn.q" -> "attn.q"`` — strip the forward-order prefix so a
+    live probe site can be matched against calibration tap names (which are
+    projection-scoped, shared across a scanned stack's layers)."""
+    head, _, tail = site.partition(".")
+    return tail if head.isdigit() and tail else site
+
+
+# stat key emitted by probe_qlinear -> registry gauge family (per-site gauges
+# are named "<family>.<site>"; array-valued stats never become gauges)
+_GAUGE_OF = {
+    "a_util": "numerics_a_codebook_util",
+    "a_dead": "numerics_a_dead_centroids",
+    "a_entropy": "numerics_a_index_entropy",
+    "a_sat": "numerics_a_saturation",
+    "sqnr_db": "numerics_sqnr_db",
+    "w_util": "numerics_w_codebook_util",
+    "w_dead": "numerics_w_dead_centroids",
+    "w_entropy": "numerics_w_index_entropy",
+    "out_energy": "numerics_outlier_energy_captured",
+    "out_overlap": "numerics_outlier_topk_overlap",
+}
+
+
+class QualityMonitor:
+    """Host-side sink for probed packed steps: registry gauges + drift alarms.
+
+    ``ingest`` takes one probed step's flat ``{site/stat: value}`` dict
+    (device_get'd), publishes per-site gauges, scores per-site drift against
+    calibration stats (or, absent those, against the first sampled step's
+    own stats — a self-baseline, so a cold deployment still detects
+    mid-flight shifts), and raises the alarm counter when a site's score
+    exceeds ``drift_threshold`` OR spikes against its own running median
+    (a :class:`repro.distributed.fault_tolerance.StepMonitor` per site — the
+    same straggler rule the cluster posture uses for step times, applied to
+    the drift series).
+    """
+
+    def __init__(self, telemetry, calib_stats: dict | None = None,
+                 drift_threshold: float = 0.5, window: int = 64,
+                 straggler_factor: float = 4.0, min_spike: float = 0.25):
+        from repro.distributed.fault_tolerance import StepMonitor
+
+        self.tel = telemetry
+        self.calib = dict(calib_stats or {})
+        self.baseline: dict[str, dict] = {}
+        self.threshold = float(drift_threshold)
+        self.min_spike = float(min_spike)
+        self._mk_monitor = lambda: StepMonitor(
+            window=window, straggler_factor=straggler_factor)
+        self.monitors: dict[str, object] = {}
+        t = telemetry
+        self.c_steps = t.counter("numerics_probe_steps",
+                                 "packed steps that ran with probes on")
+        self.c_alarms = t.counter("numerics_drift_alarms",
+                                  "per-site calibration-drift alarms")
+        self.g_drift_max = t.gauge("numerics_drift_max",
+                                   "worst per-site drift score, last probe")
+        self.g_sqnr_min = t.gauge("numerics_sqnr_db_min",
+                                  "worst per-site SQNR (dB), last probe")
+
+    def _calib_for(self, site: str) -> dict | None:
+        tap = site_tap(site)
+        hit = self.calib.get(tap) or self.calib.get(site)
+        if hit is not None:
+            return hit
+        for name, st in self.calib.items():
+            if name.endswith(tap) or tap.endswith(name):
+                return st
+        return None
+
+    def ingest(self, probes: dict) -> dict:
+        """One probed step's host-side values -> gauges/alarms. Returns the
+        per-site stat dicts (handy for tests and the bench's drift phase)."""
+        sites: dict[str, dict] = {}
+        for key, v in probes.items():
+            site, _, stat = key.rpartition("/")
+            arr = np.asarray(v)
+            if arr.ndim:  # hist arrays stay probe-only (not gauge material)
+                continue
+            sites.setdefault(site, {})[stat] = float(arr)
+        drift_max, sqnr_min = 0.0, math.inf
+        for site, st in sorted(sites.items()):
+            for stat, fam in _GAUGE_OF.items():
+                if stat in st:
+                    self.tel.gauge(f"{fam}.{site}").set(st[stat])
+            if "sqnr_db" in st:
+                sqnr_min = min(sqnr_min, st["sqnr_db"])
+            live = {"mean": st.get("act_mean", 0.0),
+                    "rms": st.get("act_rms", 0.0),
+                    "absmax_mean": st.get("act_absmax_mean", 0.0),
+                    "absmax_max": st.get("act_absmax_max", 0.0)}
+            calib = self._calib_for(site)
+            if calib is None:
+                calib = self.baseline.setdefault(site, dict(live))
+            d = drift_score(live, calib)
+            st["drift"] = d
+            self.tel.gauge(f"numerics_drift.{site}").set(d)
+            mon = self.monitors.get(site)
+            if mon is None:
+                mon = self.monitors[site] = self._mk_monitor()
+            spiked = mon.is_straggler(d) and d > self.min_spike
+            mon.record(d)
+            if d > self.threshold or spiked:
+                self.c_alarms.add()
+            drift_max = max(drift_max, d)
+        self.c_steps.add()
+        self.g_drift_max.set(drift_max)
+        if sqnr_min < math.inf:
+            self.g_sqnr_min.set(sqnr_min)
+        qc = getattr(self.tel, "quality_counter", None)
+        if qc is not None:  # Perfetto counter tracks (quality over time)
+            qc("numerics_drift_max", drift_max)
+            if sqnr_min < math.inf:
+                qc("numerics_sqnr_db_min", sqnr_min)
+        return sites

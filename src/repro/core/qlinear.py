@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.kernel_routing as kr
+import repro.core.numerics as nx
 import repro.core.outlier as ol
 import repro.core.quantize as qz
 from repro.core.lut_gemm import lut_gemm as _lut_gemm_jnp
@@ -80,6 +81,10 @@ class QLinearConfig:
     # lax.top_k; independent of the GEMM route so they flip separately.
     # REPRO_TOPK_KERNEL env overrides the auto default.
     detect_kernel: KernelRoute = "auto"
+    # quant-health probes (core/numerics): emitted only when a probe
+    # collector is active at trace time (the `quality` telemetry level);
+    # rule-addressable via QuantSpec so noisy layers can be muted.
+    probe: bool = True
 
     def __post_init__(self):
         if self.kernel not in kr.ROUTES:
@@ -329,6 +334,15 @@ def qlinear_apply(p: QLinearParams, x: jax.Array, cfg: QLinearConfig | None = No
             else ol.compensate_scatter(r, outs, p.qw, cfg.compute_dtype)
         )
         y = y + comp
+
+    if cfg.probe and nx.collecting():
+        # quant-health probes (quality telemetry level only): pure reductions
+        # on the intermediates above; `y` is never touched. Outside collect()
+        # this is a no-op and the traced path is byte-identical.
+        nx.probe_qlinear(
+            p, x, qa=qa, outs=outs, k_out=k_out,
+            dynamic=(cfg.detection == "dynamic" and cfg.outlier_frac > 0),
+            scale_mode=cfg.scale_mode, tier=tier)
 
     if p.bias is not None:
         y = y + p.bias.astype(cfg.compute_dtype)

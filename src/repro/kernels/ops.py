@@ -34,7 +34,7 @@ from repro.kernels.topk_outlier import (
 
 __all__ = ["lut_gemm", "lut_gemm_fused", "bucketize", "topk_outlier",
            "quantize_outlier_streaming", "should_interpret",
-           "autotune_lut_blocks"]
+           "autotune_lut_blocks", "index_histogram"]
 
 
 def should_interpret() -> bool:
@@ -181,6 +181,25 @@ def lut_gemm_fused(x: jax.Array, codebook: jax.Array, qw: QuantizedWeight,
     )
     y = y.reshape(*lead, qw.shape[1])
     return (y * s.reshape(*lead, 1) * qw.scale).astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def index_histogram(idx: jax.Array, n_bins: int, weights=None) -> jax.Array:
+    """Occupancy histogram of codebook indices: (n_bins,) f32 scatter-add.
+
+    ``weights`` (optional, broadcast-compatible with ``idx``) lets callers
+    mask elements out with 0/1 weights; counts stay integer-exact in f32 up
+    to 2^24 elements per bin (numpy oracle: ``np.bincount``). Serves the
+    quality-probe layer (core/numerics) — the indices come straight from the
+    bucketize/streaming kernels' output, so the histogram audits exactly
+    what the LUT-GEMM consumed.
+    """
+    flat = idx.reshape(-1).astype(jnp.int32)
+    if weights is None:
+        w = jnp.ones(flat.shape, jnp.float32)
+    else:
+        w = jnp.broadcast_to(weights, idx.shape).reshape(-1).astype(jnp.float32)
+    return jnp.zeros((n_bins,), jnp.float32).at[flat].add(w)
 
 
 @jax.jit

@@ -24,7 +24,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core import calibration
+from repro.core import calibration, numerics
 from repro.core.qlinear import QLinearParams, qlinear_apply
 from repro.distributed.sharding import constrain
 
@@ -70,6 +70,9 @@ def dense_apply(p, x: jax.Array, tap_name: str | None = None) -> jax.Array:
     if tap_name is not None and not isinstance(x, jax.core.Tracer):
         x = calibration.tap(tap_name, x)
     if isinstance(p, QLinearParams):
+        # names the next quant-health probe site (works on tracers, unlike
+        # calibration.tap); no-op unless a numerics collector is active
+        numerics.announce(tap_name)
         return qlinear_apply(p, x)
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:

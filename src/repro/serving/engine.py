@@ -76,8 +76,11 @@ class ServeConfig:
     speculative: SpeculativeConfig | None = None
     # telemetry (serving/telemetry.py): "metrics" (default — counters, gauges,
     # SLO histograms, step ring), "trace" (adds per-request timelines + spans
-    # for the Perfetto export), "off" (null object: zero per-token work and an
-    # untouched packed-step jaxpr), or a TelemetryConfig for fence/ring knobs
+    # for the Perfetto export), "quality" (trace + the quantization-numerics
+    # probes of core/numerics — sampled probed packed steps, drift alarms,
+    # shadow-reference quality checks; the only level allowed to recompile),
+    # "off" (null object: zero per-token work and an untouched packed-step
+    # jaxpr), or a TelemetryConfig for fence/ring/sampling knobs
     telemetry: object = "metrics"
 
     @classmethod
@@ -157,12 +160,18 @@ class ServingEngine:
     """
 
     def __init__(self, model: Model, params, sc: ServeConfig, batch_slots: int = 8,
-                 draft=None):
+                 draft=None, calib_stats=None, shadow_params=None):
         """``draft`` (speculative configs): a prepared draft model —
         ``(model, params)``, ``(model, params, spec)``, or the
         :class:`~repro.core.artifact.QuantizedArtifact` tuple. When omitted,
         ``sc.speculative.draft_artifact`` is loaded from disk (the
-        production path: quantize the draft once, serve it everywhere)."""
+        production path: quantize the draft once, serve it everywhere).
+
+        ``calib_stats`` / ``shadow_params`` feed the quality-observability
+        layer (``telemetry="quality"``; see Scheduler): per-tap calibration
+        activation stats (``core.artifact.load_calib_stats``) for drift
+        scoring, and the shadow-reference parameter tree (None = serve
+        params, the self-referencing probe)."""
         from repro.serving.telemetry import make_telemetry
 
         self.model, self.sc, self.slots = model, sc, batch_slots
@@ -192,7 +201,9 @@ class ServingEngine:
 
                 draft = load_draft(sc.speculative.draft_artifact)
             self.scheduler = Scheduler(model, params, sc, slots=batch_slots,
-                                       draft=draft, telemetry=self.telemetry)
+                                       draft=draft, telemetry=self.telemetry,
+                                       calib_stats=calib_stats,
+                                       shadow_params=shadow_params)
         else:
             if sc.speculative is not None:
                 raise ValueError(

@@ -91,11 +91,18 @@ from repro.serving.speculative import (
     DraftRunner,
     greedy_verify,
     make_packed_fn,
+    make_probed_packed_fn,
     rejection_sample,
 )
 from repro.serving.telemetry import linear_buckets, log_buckets, make_telemetry
 
 __all__ = ["RequestState", "Request", "Scheduler"]
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.float64) - x.max()
+    e = np.exp(x)
+    return e / e.sum()
 
 
 class RequestState(enum.Enum):
@@ -157,10 +164,19 @@ class Scheduler:
 
     ``draft`` (speculative configs): ``(model, params)`` or
     ``(model, params, spec)`` — e.g. a ``load_quantized`` artifact tuple.
+
+    Quality observability (``telemetry="quality"``): ``calib_stats`` is the
+    per-tap calibration-time activation-stats dict persisted by
+    ``core/artifact.save_quantized`` (``load_calib_stats``) — live probe
+    stats drift-score against it (absent stats, the first probed step seeds
+    a self-baseline); ``shadow_params`` is the reference parameter tree for
+    the shadow quality probe (dense fp or a higher-precision spec) — None
+    uses the serving params themselves (the self-referencing spec: KL ~ 0,
+    agreement == 1 gates the probe machinery itself).
     """
 
     def __init__(self, model, params, sc, slots: int = 8, draft=None,
-                 telemetry=None):
+                 telemetry=None, calib_stats=None, shadow_params=None):
         policies = model.cache_policies()
         if policies is None:
             raise ValueError(
@@ -341,6 +357,44 @@ class Scheduler:
         if self._rec:
             self._zero_fn = jax.jit(zero_state_slot)
             self._commit_fn = jax.jit(self._make_commit_fn())
+        # ---- quality level: quantization-numerics observability ----------
+        # Every other level keeps self._packed_fn untouched (its jaxpr is
+        # asserted identical to a probe-free build); quality swaps in the
+        # PROBED packed step on sampled steps and pays its recompile.
+        self._quality = None
+        self._probe_fn = None
+        self._step_i = 0
+        if getattr(tel, "quality", False):
+            from repro.core import numerics as _nx
+
+            self._probe_fn = jax.jit(make_probed_packed_fn(model))
+            self._quality = _nx.QualityMonitor(
+                tel, calib_stats=calib_stats,
+                drift_threshold=tel.cfg.quality_drift_threshold)
+            self._shadow_params = (shadow_params if shadow_params is not None
+                                   else params)
+            self._shadow_len = sc.cache_len
+            self._shadow_fn = jax.jit(self._make_shadow_fn())
+            self._h_shadow_kl = tel.histogram(
+                "numerics_shadow_logit_kl", log_buckets(1e-9, 1e3),
+                "KL(serving || shadow reference) at the probed decode "
+                "position, nats")
+            self._g_shadow_top1 = tel.gauge(
+                "numerics_shadow_top1_agreement",
+                "serving vs shadow argmax agreement at the probed position")
+            self._g_shadow_agree = tel.gauge(
+                "numerics_shadow_token_agreement",
+                "teacher-forced shadow greedy agreement over the committed "
+                "decode window")
+            self._c_shadow = tel.counter(
+                "numerics_shadow_probes", "shadow-reference forwards run")
+            if self.spec is not None:
+                self._h_first_reject = tel.histogram(
+                    "numerics_spec_first_reject_pos",
+                    linear_buckets(0.0, float(self.spec.k + 1),
+                                   self.spec.k + 1),
+                    "draft position of the first greedy rejection "
+                    "(acceptance attribution; full accepts not observed)")
 
     @property
     def stats(self) -> dict:
@@ -581,12 +635,22 @@ class Scheduler:
             n_prefill += n
         ctx = pos.max(axis=1) + 1  # per-row horizon (all-pad rows stay 0)
 
+        # quality level: 1 in quality_sample_every steps runs the PROBED
+        # packed fn (step 0 included, so short smokes populate every gauge);
+        # all other steps — and every other level — dispatch the untouched
+        # packed step
+        probe_now = (self._probe_fn is not None and
+                     self._step_i % tel.cfg.quality_sample_every == 0)
+        probes = None
         t_dispatch = tel.now()
         with tel.annotate("packed_step"):
-            self.pools, logits, extras = self._packed_fn(
-                self.params, self.pools, jnp.asarray(bt), jnp.asarray(slot_ids),
-                jnp.asarray(pos), jnp.asarray(ctx), jnp.asarray(tok),
-            )
+            args = (self.params, self.pools, jnp.asarray(bt),
+                    jnp.asarray(slot_ids), jnp.asarray(pos), jnp.asarray(ctx),
+                    jnp.asarray(tok))
+            if probe_now:
+                self.pools, logits, extras, probes = self._probe_fn(*args)
+            else:
+                self.pools, logits, extras = self._packed_fn(*args)
             if tel.fence:  # exact host/device split on async backends
                 jax.block_until_ready(logits)
         t_done = tel.now()
@@ -606,8 +670,20 @@ class Scheduler:
         if self.spec is not None and decoders:
             # one device->host transfer of every verify argmax
             am = np.asarray(jnp.argmax(logits, axis=-1))
+        shadow_pick = None
+        shadow_args = None
+        if (self._quality is not None and decoders and
+                self._step_i % tel.cfg.quality_shadow_every == 0):
+            # deepest committed context = most decode positions to audit
+            shadow_pick = max(decoders, key=lambda q: len(q.context))
         for r in decoders:
             cells = verify_cells[r.rid]
+            if r is shadow_pick:
+                # first verify cell's logits condition on context +
+                # [next_token] — the prefix the shadow forward replays
+                rw0, cc0 = cells[0]
+                shadow_args = (r, np.asarray(logits[rw0, cc0], np.float32),
+                               len(r.context) + 1)
             r.context.append(r.next_token)
             r.prefilled += 1  # the segment's first cell wrote it to the cache
             if self.spec is None:
@@ -639,6 +715,9 @@ class Scheduler:
             st["rolled_back_tokens"].add(len(d) - n_acc)
             st["decode_slot_tokens"].add(len(committed))
             self._h_accept.observe(n_acc)
+            if self._quality is not None and n_acc < len(d):
+                # acceptance attribution: which draft position broke first
+                self._h_first_reject.observe(float(n_acc))
             tel.tokens_committed(r.rid, len(committed))
             tel.request_event(r.rid, "verify_round", drafted=len(d),
                               accepted=n_acc, committed=len(committed))
@@ -672,6 +751,12 @@ class Scheduler:
                     sum(1 for b in r.blocks if b >= 0))
         for r in [r for r in self._running if r.done]:
             self._finish(r, results)
+        if probes is not None:
+            # one transfer of the whole probe dict -> gauges + drift/alarms
+            self._quality.ingest(jax.device_get(probes))
+        if shadow_args is not None:
+            self._shadow_probe(*shadow_args)
+        self._step_i += 1
         if tel.enabled:
             dec_rows = len(decoders) * self._dec_rows
             tel.step_record(
@@ -692,6 +777,51 @@ class Scheduler:
         if not self._has_paged:
             return 0
         return blocks_needed(n_tokens, self.pcfg.block_size)
+
+    def _make_shadow_fn(self):
+        """Jitted shadow-reference forward: a plain cache-free teacher-forced
+        run over one request's committed context, zero-padded to a fixed
+        length (``cache_len``) so it compiles once. Causality makes the
+        padding inert for every position actually read."""
+        model = self.model
+
+        def shadow(params, tokens):  # (1, L) int32
+            out = model.apply(params, {"tokens": tokens})
+            return out.logits[0, :, : model.cfg.vocab_size]
+
+        return shadow
+
+    def _shadow_probe(self, r: Request, served: np.ndarray,
+                      prefix_len: int) -> None:
+        """Off-hot-path shadow quality probe (quality level, sampled): re-run
+        ``r``'s committed context through the reference forward; record the
+        logit KL + top-1 agreement at the probed decode position (vs the
+        serving step's own logits for the same prefix) and the teacher-forced
+        greedy-token agreement over the whole committed decode window."""
+        toks = r.context[: self._shadow_len]
+        m = len(toks)
+        if m < 2:
+            return
+        padded = np.zeros((1, self._shadow_len), np.int32)
+        padded[0, :m] = toks
+        sl = np.asarray(jax.device_get(
+            self._shadow_fn(self._shadow_params, jnp.asarray(padded))),
+            np.float32)[:m]
+        i = prefix_len - 1
+        if 0 <= i < m:
+            p, q = _softmax(served), _softmax(sl[i])
+            kl = max(float(np.sum(p * (np.log(p + 1e-12)
+                                       - np.log(q + 1e-12)))), 0.0)
+            self._h_shadow_kl.observe(kl)
+            self._g_shadow_top1.set(
+                float(int(np.argmax(served)) == int(np.argmax(sl[i]))))
+            self.telemetry.quality_counter("numerics_shadow_logit_kl", kl)
+        start = max(len(r.prompt) - 1, 0)
+        if m - 1 > start:
+            pred = np.argmax(sl[start: m - 1], axis=-1)
+            ref = np.asarray(toks[start + 1: m])
+            self._g_shadow_agree.set(float((pred == ref).mean()))
+        self._c_shadow.add()
 
     def _make_commit_fn(self):
         """Jitted corrective commit for recurrent layers: a verify row's

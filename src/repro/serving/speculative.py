@@ -60,7 +60,8 @@ from repro.serving.paged_cache import (
 )
 
 __all__ = ["SpeculativeConfig", "DraftRunner", "greedy_verify", "rejection_sample",
-           "make_packed_fn", "load_draft", "DEFAULT_DRAFT_SPEC"]
+           "make_packed_fn", "make_probed_packed_fn", "load_draft",
+           "DEFAULT_DRAFT_SPEC"]
 
 
 # Default draft policy: W3 K-Means weights everywhere except a W4 guard on
@@ -134,6 +135,63 @@ def make_packed_fn(model):
         return pools, out.logits[..., : model.cfg.vocab_size], extras
 
     return packed_step
+
+
+def make_probed_packed_fn(model):
+    """Quality-level packed forward: :func:`make_packed_fn`'s exact contract
+    plus a 4th output — the flat ``{site/stat: value}`` dict of quant-health
+    probes from ``core/numerics`` (one site per quantized projection per
+    layer, in forward order).
+
+    Pools, logits, and extras come from the UNTOUCHED scanned packed step —
+    the same ops :func:`make_packed_fn` traces — so serving state and greedy
+    tokens at the ``quality`` level are bit-identical to every other level
+    by construction (asserted in tests/test_numerics.py). The probes ride a
+    SECOND, probe-only forward whose outputs are discarded: a ``lax.scan``
+    body cannot return per-iteration aux stats, so a scan-stacked model is
+    unrolled for it (stacked ``params["blocks"]`` / layer pools unstacked
+    per layer, exactly like ``model.unstack_for_capture``) and runs with
+    ``scan_layers=False`` under an active probe collector, masked on
+    ``positions >= 0`` so padded grid cells contribute zero to every stat.
+    The duplicated forward is the sampled probe step's price (one extra
+    forward every ``quality_sample_every`` steps); scan-stacked families
+    with no unrolled variant (vlm) serve unprobed (empty dict). Only the
+    ``quality`` telemetry level traces this function.
+    """
+    from repro.core import numerics as nx
+    from repro.models.model import build
+
+    cfg = model.cfg
+    unroll = cfg.scan_layers and cfg.family != "vlm"
+    umodel = build(dataclasses.replace(cfg, scan_layers=False)) if unroll else model
+    n_layers = cfg.n_layers
+    packed_step = make_packed_fn(model)
+
+    def probed_step(params, pools, bt, slot_ids, positions, ctx, tokens):
+        # authoritative outputs: the exact scanned packed step
+        new_pools, logits, extras = packed_step(
+            params, pools, bt, slot_ids, positions, ctx, tokens)
+        if cfg.scan_layers and not unroll:
+            # probes inside a scan body would leak tracers — serve unprobed
+            return new_pools, logits, extras, {}
+        if unroll:
+            blocks = params["blocks"]
+            params_u = {**params, "blocks": [
+                jax.tree.map(lambda a, i=i: a[i], blocks)
+                for i in range(n_layers)]}
+            pools_u = [jax.tree.map(lambda a, i=i: a[i], pools)
+                       for i in range(n_layers)]
+        else:
+            params_u, pools_u = params, pools
+        caches = attach_tables(pools_u, bt, ctx, n_layers, False,
+                               token_slots=slot_ids)
+        mask = (positions >= 0).astype(jnp.float32)
+        with nx.collect(mask=mask) as col:
+            umodel.apply(params_u, {"tokens": tokens}, positions=positions,
+                         caches=caches)
+        return new_pools, logits, extras, col.out
+
+    return probed_step
 
 
 def greedy_verify(targets: list[int], drafts: list[int],

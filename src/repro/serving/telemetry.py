@@ -32,7 +32,15 @@ jaxpr is untouched (telemetry never wraps traced code; only host-side
 ``jax.profiler.TraceAnnotation`` spans are emitted, and only when enabled).
 ``"metrics"`` (default) keeps counters, gauges, histograms, and the step
 ring. ``"trace"`` additionally records per-request event timelines and named
-spans for the Perfetto export.
+spans for the Perfetto export. ``"quality"`` is trace plus the quantization-
+numerics observability layer (``core/numerics``): the scheduler swaps in a
+PROBED packed step on sampled steps (1 in ``quality_sample_every``), so —
+unlike every other level — quality is allowed to retrace/recompile; the
+off/metrics/trace jaxprs stay byte-identical (asserted in
+tests/test_numerics.py). Quality metrics land in the same registry
+(``numerics_*`` families), as Perfetto COUNTER TRACKS (pid 2) on the same
+timeline as the latency lanes, and in the Prometheus text exposition
+:meth:`Telemetry.expfmt`.
 
 :class:`StreamingStats` is the one windowed streaming-stats implementation in
 the repo: the step records use it for running step-time medians, and
@@ -48,6 +56,7 @@ import dataclasses
 import json
 import math
 import pathlib
+import re
 import time
 from collections import deque
 
@@ -320,23 +329,35 @@ class StreamingStats:
 # telemetry object
 # ---------------------------------------------------------------------------
 
-_LEVELS = ("off", "metrics", "trace")
+_LEVELS = ("off", "metrics", "trace", "quality")
 
 
 @dataclasses.dataclass(frozen=True)
 class TelemetryConfig:
     """``ServeConfig.telemetry``. ``level``: ``"off"`` (null object),
-    ``"metrics"`` (default: counters/gauges/histograms + step ring), or
+    ``"metrics"`` (default: counters/gauges/histograms + step ring),
     ``"trace"`` (adds per-request event timelines + named spans for the
-    Perfetto export). ``fence=True`` blocks on the packed step's output so
-    the host/device time split is exact (adds a sync, never a dispatch).
-    ``step_ring`` bounds the per-step record buffer; ``max_requests`` bounds
-    completed request timelines kept under trace."""
+    Perfetto export), or ``"quality"`` (trace + the quantization-numerics
+    probes of ``core/numerics``; the only level allowed to recompile).
+    ``fence=True`` blocks on the packed step's output so the host/device
+    time split is exact (adds a sync, never a dispatch). ``step_ring``
+    bounds the per-step record buffer; ``max_requests`` bounds completed
+    request timelines kept under trace.
+
+    Quality knobs (ignored below level quality): ``quality_sample_every``
+    probes 1 in N packed steps (step 0 always probes, so short smokes
+    populate every gauge); ``quality_shadow_every`` runs the shadow-
+    reference forward every N packed steps; ``quality_drift_threshold`` is
+    the absolute per-site drift score that raises ``numerics_drift_alarms``.
+    """
 
     level: str = "metrics"
     fence: bool = False
     step_ring: int = 512
     max_requests: int = 2048
+    quality_sample_every: int = 16
+    quality_shadow_every: int = 32
+    quality_drift_threshold: float = 0.5
 
     def __post_init__(self):
         if self.level not in _LEVELS:
@@ -344,6 +365,11 @@ class TelemetryConfig:
                 f"telemetry level must be one of {_LEVELS}, got {self.level!r}")
         if self.step_ring < 1 or self.max_requests < 1:
             raise ValueError("step_ring and max_requests must be >= 1")
+        if self.quality_sample_every < 1 or self.quality_shadow_every < 1:
+            raise ValueError(
+                "quality_sample_every and quality_shadow_every must be >= 1")
+        if self.quality_drift_threshold <= 0:
+            raise ValueError("quality_drift_threshold must be > 0")
 
     @classmethod
     def parse(cls, v) -> "TelemetryConfig":
@@ -392,6 +418,8 @@ class Telemetry:
         self.spans: deque[tuple] = deque(maxlen=4 * self.cfg.step_ring)
         self._live: dict[int, _RequestTrace] = {}
         self.completed: deque[_RequestTrace] = deque(maxlen=self.cfg.max_requests)
+        # (t, name, value) samples for Perfetto counter tracks (quality level)
+        self.quality_series: deque[tuple] = deque(maxlen=8 * self.cfg.step_ring)
         self._mk_serving_metrics()
 
     # -------------------------------------------------------------- plumbing
@@ -401,7 +429,11 @@ class Telemetry:
 
     @property
     def tracing(self) -> bool:
-        return self.cfg.level == "trace"
+        return self.cfg.level in ("trace", "quality")
+
+    @property
+    def quality(self) -> bool:
+        return self.cfg.level == "quality"
 
     @property
     def fence(self) -> bool:
@@ -438,8 +470,15 @@ class Telemetry:
         self.spans.clear()
         self._live.clear()
         self.completed.clear()
+        self.quality_series.clear()
         self.step_times = StreamingStats(window=self.step_times.window)
         self._t0 = self._clock()
+
+    def quality_counter(self, name: str, value: float) -> None:
+        """Record one sample of a quality counter track (rendered as a
+        Perfetto "C" event on pid 2, sharing the timeline with the latency
+        lanes). Bounded deque; call per probed step, not per site."""
+        self.quality_series.append((self.now(), name, float(value)))
 
     def _mk_serving_metrics(self) -> None:
         """Pre-register the serving metric families so a snapshot taken
@@ -603,8 +642,10 @@ class Telemetry:
         Lanes: pid 0 ("engine") carries packed-step slices (from the step
         ring) on tid 0 and named spans (draft scan/catch-up, trace level) on
         tid 1; pid 1 ("requests") gives every traced request its own tid with
-        queued/prefill/decode phase slices and instant events. Open the file
-        at ui.perfetto.dev (or chrome://tracing)."""
+        queued/prefill/decode phase slices and instant events; pid 2
+        ("quality") renders the numerics counter tracks ("C" events — one
+        track per metric, so quantization quality and latency share a
+        timeline). Open the file at ui.perfetto.dev (or chrome://tracing)."""
         us = 1e6
         ev: list[dict] = [
             {"ph": "M", "pid": 0, "tid": 0, "name": "process_name",
@@ -616,6 +657,12 @@ class Telemetry:
             {"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
              "args": {"name": "requests"}},
         ]
+        if self.quality_series:
+            ev.append({"ph": "M", "pid": 2, "tid": 0, "name": "process_name",
+                       "args": {"name": "quality"}})
+            for t, name, v in self.quality_series:
+                ev.append({"ph": "C", "pid": 2, "tid": 0, "name": name,
+                           "ts": (t - self._t0) * us, "args": {"value": v}})
         for s in self.steps:
             dur = (s["host_s"] + s["device_s"]) * us
             t1 = s["t"] * us  # records stamp completion time
@@ -655,6 +702,47 @@ class Telemetry:
              "otherData": {"level": self.cfg.level}}))
         return path
 
+    def expfmt(self) -> str:
+        """Prometheus text exposition of the registry (for external
+        scrapers / file-based collection). Metric names are sanitized to the
+        Prometheus charset (per-site gauges like ``numerics_sqnr_db.003.
+        attn.q`` become ``numerics_sqnr_db_003_attn_q``); histograms emit
+        the standard cumulative ``_bucket``/``_sum``/``_count`` triplet."""
+        out: list[str] = []
+
+        def emit(name, kind, help_, lines):
+            if help_:
+                out.append(f"# HELP {name} {help_}")
+            out.append(f"# TYPE {name} {kind}")
+            out.extend(lines)
+
+        for k, c in sorted(self.registry.counters.items()):
+            n = _promname(k)
+            emit(n, "counter", c.help, [f"{n} {_promval(c.value)}"])
+        for k, g in sorted(self.registry.gauges.items()):
+            n = _promname(k)
+            emit(n, "gauge", g.help, [f"{n} {_promval(g.value)}"])
+        for k, h in sorted(self.registry.histograms.items()):
+            n = _promname(k)
+            lines, acc = [], 0
+            for bound, cnt in zip(h.bounds, h.counts):
+                acc += cnt
+                lines.append(f'{n}_bucket{{le="{_promval(bound)}"}} {acc}')
+            lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
+            lines.append(f"{n}_sum {_promval(h.sum)}")
+            lines.append(f"{n}_count {h.count}")
+            emit(n, "histogram", h.help, lines)
+        return "\n".join(out) + ("\n" if out else "")
+
+
+def _promname(name: str) -> str:
+    return re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+
+
+def _promval(v) -> str:
+    f = float(v)
+    return repr(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
 
 class _Span:
     """Context manager pairing a jax TraceAnnotation with a span record."""
@@ -683,13 +771,21 @@ class NullTelemetry:
     cfg = TelemetryConfig(level="off")
     enabled = False
     tracing = False
+    quality = False
     fence = False
     steps: tuple = ()
     spans: tuple = ()
     completed: tuple = ()
+    quality_series: tuple = ()
 
     def now(self) -> float:
         return 0.0
+
+    def quality_counter(self, name, value):
+        pass
+
+    def expfmt(self) -> str:
+        return ""
 
     def counter(self, name, help=""):
         return _NULL_METRIC

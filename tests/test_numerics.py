@@ -1,0 +1,445 @@
+"""Quantization-numerics observability tests (core/numerics + the `quality`
+telemetry level): probe reductions vs numpy oracles (bit-equal histograms),
+pathological-codebook health gauges, the off/metrics jaxpr + dispatch identity
+guard, quality-vs-off greedy-token identity under prefix sharing +
+speculation, calibration-drift alarms on a shifted distribution, the
+self-referencing shadow probe (agreement == 1.0), artifact calib-stats
+round-trip, and the Prometheus expfmt / Perfetto counter-track exports."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core import numerics as nx
+from repro.core.artifact import load_calib_stats, save_quantized
+from repro.core.qlinear import QLinearConfig, qlinear_apply, quantize_linear
+from repro.core.quantize import (
+    dequantize_activation,
+    quantize_activation,
+    token_scale,
+)
+from repro.core.quantspec import QuantSpec
+from repro.models.model import build, quantize_model
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.speculative import SpeculativeConfig, make_packed_fn
+from repro.serving.telemetry import Telemetry, TelemetryConfig, make_telemetry
+
+QSPEC = QuantSpec(base=QLinearConfig(detection="none"))
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_smoke_config("llama3_2_1b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, quantize_model(model, params, QSPEC)
+
+
+def _mk_engine(model, qp, level, **kw):
+    eng_kw = {k: kw.pop(k) for k in ("calib_stats", "shadow_params", "draft")
+              if k in kw}
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    return ServingEngine(model, qp,
+                         ServeConfig(cache_dtype="float32", telemetry=level,
+                                     **kw),
+                         batch_slots=2, **eng_kw)
+
+
+def _qtel(sample_every=1, shadow_every=2, **kw):
+    return TelemetryConfig(level="quality", quality_sample_every=sample_every,
+                           quality_shadow_every=shadow_every, **kw)
+
+
+def _qlp(detection="none", a_bits=4, w_bits=4, frac=0.0, seed=0,
+         k_in=32, n_out=24):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(k_in, n_out).astype(np.float32))
+    calib = jnp.asarray(rng.randn(128, k_in).astype(np.float32))
+    cfg = QLinearConfig(w_bits=w_bits, a_bits=a_bits, detection=detection,
+                        outlier_frac=frac)
+    return quantize_linear(w, calib, cfg), cfg
+
+
+# ---------------------------------------------------------------------------
+# collector mechanics
+# ---------------------------------------------------------------------------
+
+def test_collector_inactive_by_default():
+    assert not nx.collecting()
+    p, _ = _qlp()
+    x = jnp.ones((2, 32), jnp.float32)
+    qlinear_apply(p, x)  # no collector: the hook must be a pure no-op
+    assert not nx.collecting()
+    with nx.collect() as col:
+        assert nx.collecting()
+    assert not nx.collecting() and isinstance(col.out, dict)
+
+
+def test_collector_site_naming_and_announce():
+    col = nx.ProbeCollector()
+    col.announce("attn.q")
+    col.emit({"a": 1.0})
+    col.emit({"b": 2.0})  # un-announced: falls back to a numbered site
+    col.announce("attn.q")  # same tap again -> new forward-order prefix
+    col.emit({"a": 3.0})
+    assert set(col.out) == {"000.attn.q/a", "001.proj/b", "002.attn.q/a"}
+    assert nx.site_tap("000.attn.q") == "attn.q"
+    assert nx.site_tap("017.mlp.wi") == "mlp.wi"
+    assert nx.site_tap("noprefix") == "noprefix"
+
+
+def test_probe_flag_mutes_sites():
+    p, _ = _qlp()
+    import dataclasses
+
+    muted = dataclasses.replace(p, cfg=dataclasses.replace(p.cfg, probe=False))
+    x = jnp.ones((2, 32), jnp.float32)
+    with nx.collect() as col:
+        qlinear_apply(muted, x)
+    assert col.out == {}
+    with nx.collect() as col:
+        qlinear_apply(p, x)
+    assert col.out  # probe=True (default) emits
+
+
+# ---------------------------------------------------------------------------
+# probe reductions vs numpy oracles
+# ---------------------------------------------------------------------------
+
+def test_probe_values_match_numpy_oracle():
+    p, cfg = _qlp(detection="dynamic", frac=0.1, seed=3)
+    rng = np.random.RandomState(1)
+    xs = rng.randn(5, 32).astype(np.float32)
+    x = jnp.asarray(xs)
+    with nx.collect() as col:
+        qlinear_apply(p, x)
+    out = {k: np.asarray(jax.device_get(v)) for k, v in col.out.items()}
+    (site,) = {k.rpartition("/")[0] for k in out}
+
+    # activation index histogram: bit-equal to np.bincount
+    qa = quantize_activation(x, p.act_codebook, cfg.scale_mode)
+    idx = np.asarray(jax.device_get(qa.idx)).astype(np.int64)
+    n = int(p.act_codebook.shape[0])
+    hist = np.bincount(idx.reshape(-1), minlength=n).astype(np.float32)
+    np.testing.assert_array_equal(out[f"{site}/a_hist"], hist)
+    assert out[f"{site}/a_util"] == pytest.approx((hist > 0).mean())
+    assert out[f"{site}/a_dead"] == (hist == 0).sum()
+    pr = hist / hist.sum()
+    pr = pr[pr > 0]
+    assert out[f"{site}/a_entropy"] == pytest.approx(
+        -(pr * np.log(pr)).sum() / np.log(n), rel=1e-5)
+
+    # weight index histogram: bit-equal
+    widx = np.asarray(jax.device_get(p.qw.indices)).astype(np.int64)
+    wn = int(p.qw.codebook.shape[0])
+    whist = np.bincount(widx.reshape(-1), minlength=wn).astype(np.float32)
+    np.testing.assert_array_equal(out[f"{site}/w_hist"], whist)
+    assert out[f"{site}/w_dead"] == (whist == 0).sum()
+
+    # SQNR of the main branch
+    deq = np.asarray(jax.device_get(dequantize_activation(qa)))
+    sq = 10.0 * np.log10(np.square(xs).sum() / np.square(xs - deq).sum())
+    assert out[f"{site}/sqnr_db"] == pytest.approx(sq, rel=1e-4)
+
+    # saturation vs the codebook range
+    s = np.asarray(jax.device_get(token_scale(x, cfg.scale_mode)))
+    xn = xs / s
+    book = np.asarray(jax.device_get(p.act_codebook))
+    assert out[f"{site}/a_sat"] == pytest.approx(
+        ((xn < book[0]) | (xn > book[-1])).mean(), abs=1e-6)
+
+    # live activation moments (the drift inputs)
+    am = np.abs(xs).max(-1)
+    assert out[f"{site}/act_mean"] == pytest.approx(xs.mean(), abs=1e-6)
+    assert out[f"{site}/act_rms"] == pytest.approx(
+        np.sqrt(np.square(xs).mean()), rel=1e-5)
+    assert out[f"{site}/act_absmax_mean"] == pytest.approx(am.mean(), rel=1e-5)
+    assert out[f"{site}/act_absmax_max"] == pytest.approx(am.max(), rel=1e-6)
+    assert out[f"{site}/act_tokens"] == 5.0
+
+    # Orizuru effectiveness: energy fraction in [0,1]; the jnp dynamic route
+    # IS exact lax.top_k, so overlap with the exact detector must be 1.0
+    assert 0.0 < out[f"{site}/out_energy"] <= 1.0
+    assert out[f"{site}/out_overlap"] == pytest.approx(1.0)
+
+
+def test_probe_oracle_under_jit_matches_eager():
+    p, _ = _qlp(seed=5)
+    x = jnp.asarray(np.random.RandomState(2).randn(3, 32).astype(np.float32))
+
+    def probed(x):
+        with nx.collect() as col:
+            qlinear_apply(p, x)
+        return col.out
+
+    eager = {k: np.asarray(v) for k, v in probed(x).items()}
+    jitted = {k: np.asarray(v) for k, v in jax.jit(probed)(x).items()}
+    assert set(eager) == set(jitted)
+    for k in eager:
+        np.testing.assert_allclose(jitted[k], eager[k], rtol=1e-5, atol=1e-6)
+
+
+def test_probe_mask_drops_padded_tokens():
+    p, cfg = _qlp(seed=7)
+    rng = np.random.RandomState(4)
+    x_valid = rng.randn(3, 32).astype(np.float32)
+    x_pad = np.concatenate([x_valid, 1e3 * rng.randn(2, 32).astype(np.float32)])
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    with nx.collect(mask=mask) as col:
+        qlinear_apply(p, jnp.asarray(x_pad))
+    masked = {k.rpartition("/")[-1]: np.asarray(v) for k, v in col.out.items()}
+    with nx.collect() as col2:
+        qlinear_apply(p, jnp.asarray(x_valid))
+    clean = {k.rpartition("/")[-1]: np.asarray(v) for k, v in col2.out.items()}
+    # every activation stat must equal the run that never saw the pad tokens
+    for stat in ("a_hist", "a_util", "a_dead", "a_entropy", "a_sat", "sqnr_db",
+                 "act_mean", "act_rms", "act_absmax_mean", "act_absmax_max",
+                 "act_tokens"):
+        np.testing.assert_allclose(masked[stat], clean[stat], rtol=1e-5,
+                                   atol=1e-6, err_msg=stat)
+
+
+def test_dead_centroids_and_saturation_on_pathological_codebook():
+    # a codebook whose extreme centroids sit far outside the data: the far
+    # bins never win an assignment (dead), and a tight codebook saturates
+    idx = jnp.asarray([[0, 1, 1, 0], [1, 0, 0, 1]])
+    st = {k: np.asarray(v) for k, v in nx.index_stats(idx, 8).items()}
+    assert st["dead"] == 6 and st["util"] == pytest.approx(2 / 8)
+    np.testing.assert_array_equal(st["hist"],
+                                  np.array([4, 4, 0, 0, 0, 0, 0, 0], np.float32))
+    assert st["entropy"] == pytest.approx(np.log(2) / np.log(8))
+
+    xs = np.random.RandomState(0).randn(16, 32).astype(np.float32)
+    x = jnp.asarray(xs)
+    wide = jnp.asarray(np.linspace(-8.0, 8.0, 16), jnp.float32)
+    tight = jnp.asarray(np.linspace(-0.2, 0.2, 16), jnp.float32)
+    assert float(nx.saturation_rate(x, wide, "rms")) == 0.0
+    sat = float(nx.saturation_rate(x, tight, "rms"))
+    xn = xs / np.sqrt(np.square(xs).mean(-1, keepdims=True))
+    assert sat == pytest.approx((np.abs(xn) > 0.2).mean(), abs=1e-6)
+    assert sat > 0.5  # most of a unit-RMS gaussian sits outside +-0.2
+
+
+# ---------------------------------------------------------------------------
+# drift scoring + alarms
+# ---------------------------------------------------------------------------
+
+def test_activation_stats_and_drift_score():
+    acts = np.random.RandomState(0).randn(256, 32).astype(np.float32)
+    st = nx.activation_stats(acts)
+    assert st["tokens"] == 256 and st["dim"] == 32
+    assert st["rms"] == pytest.approx(1.0, abs=0.05)
+    assert nx.drift_score(st, st) == 0.0
+    shifted = {**st, "rms": st["rms"] * 5.0, "absmax_mean": st["absmax_mean"] * 5.0}
+    assert nx.drift_score(shifted, st) > 3.0  # 5x scale = 4 rms units of drift
+    assert nx.drift_score(st, shifted) > 0.5  # and it is not symmetric-blind
+
+
+def _fake_probes(rms, site="000.attn.q"):
+    return {f"{site}/act_mean": 0.0, f"{site}/act_rms": rms,
+            f"{site}/act_absmax_mean": 3.0 * rms,
+            f"{site}/act_absmax_max": 5.0 * rms, f"{site}/act_tokens": 8.0,
+            f"{site}/sqnr_db": 20.0, f"{site}/a_util": 1.0,
+            f"{site}/a_hist": np.ones(16, np.float32)}
+
+
+def test_quality_monitor_alarms_on_shifted_distribution():
+    calib = {"attn.q": {"mean": 0.0, "rms": 1.0, "absmax_mean": 3.0,
+                        "absmax_max": 5.0}}
+    tel = make_telemetry(_qtel())
+    mon = nx.QualityMonitor(tel, calib_stats=calib, drift_threshold=0.5)
+    sites = mon.ingest(_fake_probes(rms=1.0))  # matches calibration
+    assert sites["000.attn.q"]["drift"] == pytest.approx(0.0)
+    assert tel.counter("numerics_drift_alarms").value == 0
+    sites = mon.ingest(_fake_probes(rms=5.0))  # 5x live scale: alarm
+    assert sites["000.attn.q"]["drift"] > 3.0
+    assert tel.counter("numerics_drift_alarms").value == 1
+    snap = tel.snapshot()
+    assert snap["gauges"]["numerics_drift.000.attn.q"] > 3.0
+    assert snap["gauges"]["numerics_drift_max"] > 3.0
+    assert snap["gauges"]["numerics_a_codebook_util.000.attn.q"] == 1.0
+    assert snap["counters"]["numerics_probe_steps"] == 2
+
+
+def test_quality_monitor_self_baseline_without_calib():
+    tel = make_telemetry(_qtel())
+    mon = nx.QualityMonitor(tel, calib_stats=None, drift_threshold=0.5)
+    sites = mon.ingest(_fake_probes(rms=2.0))  # first step seeds the baseline
+    assert sites["000.attn.q"]["drift"] == 0.0
+    assert tel.counter("numerics_drift_alarms").value == 0
+    mon.ingest(_fake_probes(rms=2.1))  # mild wobble: no alarm
+    assert tel.counter("numerics_drift_alarms").value == 0
+    sites = mon.ingest(_fake_probes(rms=10.0))  # 5x the seeded baseline
+    assert sites["000.attn.q"]["drift"] > 3.0
+    assert tel.counter("numerics_drift_alarms").value == 1
+
+
+def test_calib_stats_artifact_round_trip(small_lm, tmp_path):
+    cfg, model, params, qp = small_lm
+    acts = np.random.RandomState(1).randn(64, cfg.d_model).astype(np.float32)
+    d = tmp_path / "art"
+    save_quantized(d, cfg, QSPEC, qp,
+                   calib_stats={"attn.q": acts,  # raw: summarized at save
+                                "mlp.wi": nx.activation_stats(acts)})
+    stats = load_calib_stats(d)
+    assert set(stats) == {"attn.q", "mlp.wi"}
+    assert stats["attn.q"] == pytest.approx(nx.activation_stats(acts))
+    assert json.loads((d / "manifest.json").read_text())["calib_stats"]
+    # artifacts saved without stats read back None (every pre-quality save)
+    d2 = tmp_path / "plain"
+    save_quantized(d2, cfg, QSPEC, qp)
+    assert load_calib_stats(d2) is None
+
+
+# ---------------------------------------------------------------------------
+# serving integration: identity guards
+# ---------------------------------------------------------------------------
+
+def test_off_metrics_trace_jaxpr_and_dispatch_identity(small_lm):
+    """The tentpole guard: levels below `quality` trace the packed step with
+    NO collector installed, so the jaxpr — and the dispatch count — are
+    identical to a probe-free build."""
+    cfg, model, params, qp = small_lm
+    prompts = [[1, 2, 3, 4, 5], [6, 7], [8, 9, 10]]
+
+    def run(level):
+        eng = _mk_engine(model, qp, level)
+        sched = eng.scheduler
+        inner, calls = sched._packed_fn, []
+        sched._packed_fn = lambda *a: (calls.append(a), inner(*a))[1]
+        out = eng.generate(prompts, max_new_tokens=4)
+        return out, calls
+
+    outs, calls = zip(*(run(level) for level in ("off", "metrics", "trace")))
+    assert outs[0] == outs[1] == outs[2]
+    assert len(calls[0]) == len(calls[1]) == len(calls[2]) > 0
+    fn = make_packed_fn(model)
+    jx = [str(jax.make_jaxpr(fn)(*c[0])) for c in calls]
+    assert jx[0] == jx[1] == jx[2]
+
+
+def test_quality_tokens_identical_with_prefix_sharing_and_speculation(small_lm):
+    """Acceptance criterion: at `quality` — probing EVERY step, shadow every
+    other step, prefix sharing AND speculation on — greedy tokens are
+    identical to telemetry=off. Observation never perturbs serving."""
+    cfg, model, params, qp = small_lm
+    system = [3, 1, 4, 1, 5, 9, 2, 6]  # one full block at block_size=8
+    prompts = [system + [40 + i] for i in range(3)]
+
+    def run(level):
+        eng = _mk_engine(model, qp, level, prefix_cache=True,
+                         speculative=SpeculativeConfig(k=2),
+                         draft=(model, params))
+        return eng, eng.generate(prompts, max_new_tokens=5)
+
+    eng_off, out_off = run("off")
+    eng_q, out_q = run(_qtel(sample_every=1, shadow_every=2))
+    assert out_q == out_off
+    assert eng_q.stats["accepted_tokens"] > 0, "speculation was not exercised"
+    snap = eng_q.snapshot()
+    assert snap["counters"]["numerics_probe_steps"] > 0
+    g = snap["gauges"]
+    assert any(k.startswith("numerics_a_codebook_util.") for k in g)
+    assert any(k.startswith("numerics_sqnr_db.") for k in g)
+    assert any(k.startswith("numerics_drift.") for k in g)
+    # acceptance attribution histogram exists (observes only on rejections)
+    assert "numerics_spec_first_reject_pos" in snap["histograms"]
+
+
+def test_quality_probed_step_matches_packed_logits(small_lm):
+    """The probed packed step serves bit-identical logits and pools to the
+    scanned packed step: its authoritative outputs COME from that exact
+    step, with the probe-only (scan-unrolled) forward's outputs discarded.
+    The unrolled forward fuses differently under XLA (last-ulp logit
+    diffs), which is why probes must not replace the serving outputs."""
+    from repro.serving.speculative import make_probed_packed_fn
+
+    cfg, model, params, qp = small_lm
+    eng = _mk_engine(model, qp, "off")
+    sched = eng.scheduler
+    calls = []
+    inner = sched._packed_fn
+    sched._packed_fn = lambda *a: (calls.append(a), inner(*a))[1]
+    eng.generate([[1, 2, 3, 4], [5, 6]], max_new_tokens=3)
+    probed = make_probed_packed_fn(model)
+    plain = make_packed_fn(model)
+    for args in calls[:3]:
+        pools_p, logits_p, extras_p, probes = probed(*args)
+        pools, logits, extras = plain(*args)
+        np.testing.assert_array_equal(np.asarray(logits_p), np.asarray(logits))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), pools_p, pools)
+        assert probes and all(k.count("/") >= 1 for k in probes)
+
+
+def test_shadow_probe_self_reference_agreement(small_lm):
+    """Self-referencing shadow spec (shadow_params=None -> serving params):
+    the reference forward replays the very distribution being served, so
+    greedy token agreement must be exactly 1.0 and the logit KL ~ 0."""
+    cfg, model, params, qp = small_lm
+    eng = _mk_engine(model, qp, _qtel(sample_every=1, shadow_every=1))
+    eng.generate([[1, 2, 3, 4, 5]], max_new_tokens=8)
+    snap = eng.snapshot()
+    c = snap["counters"]
+    assert c["numerics_shadow_probes"] >= 1
+    kl = snap["histograms"]["numerics_shadow_logit_kl"]
+    assert kl["count"] >= 1
+    g = snap["gauges"]
+    assert g["numerics_shadow_token_agreement"] == 1.0
+    assert g["numerics_shadow_top1_agreement"] == 1.0
+    assert kl["max"] < 1e-3  # same params, same context: KL is numerics noise
+
+
+# ---------------------------------------------------------------------------
+# telemetry plumbing: level, exports
+# ---------------------------------------------------------------------------
+
+def test_quality_level_config_and_parse():
+    assert TelemetryConfig.parse("quality").level == "quality"
+    t = make_telemetry("quality")
+    assert isinstance(t, Telemetry) and t.quality and t.tracing
+    assert not make_telemetry("trace").quality
+    with pytest.raises(ValueError):
+        TelemetryConfig(level="quality", quality_sample_every=0)
+    with pytest.raises(ValueError):
+        TelemetryConfig(level="quality", quality_drift_threshold=0.0)
+
+
+def test_quality_counter_series_and_perfetto_counter_track(tmp_path):
+    tel = make_telemetry(_qtel())
+    tel.step_record(host_s=0.01, device_s=0.02, cells=2, budget=4)
+    tel.quality_counter("numerics_drift_max", 0.25)
+    tel.quality_counter("numerics_drift_max", 0.75)
+    assert [v for _, _, v in tel.quality_series] == [0.25, 0.75]
+    p = tel.export_chrome_trace(tmp_path / "t.json")
+    ev = json.loads(p.read_text())["traceEvents"]
+    counters = [e for e in ev if e.get("ph") == "C"]
+    assert len(counters) == 2 and counters[0]["pid"] == 2
+    assert counters[0]["args"]["value"] == 0.25
+    assert any(e.get("ph") == "M" and e.get("pid") == 2 for e in ev)
+    tel.reset()
+    assert len(tel.quality_series) == 0
+
+
+def test_expfmt_prometheus_text():
+    tel = make_telemetry("metrics")
+    tel.counter("serving_packed_steps").add(3)
+    tel.gauge("numerics_drift.000.attn.q").set(0.5)
+    tel.histogram("lat", [1.0, 2.0]).observe(1.5)
+    text = tel.expfmt()
+    assert "# TYPE serving_packed_steps counter" in text
+    assert "serving_packed_steps 3" in text
+    # metric names are sanitized to the Prometheus charset
+    assert "numerics_drift_000_attn_q 0.5" in text
+    assert 'lat_bucket{le="2"} 1' in text and 'lat_bucket{le="+Inf"} 1' in text
+    assert "lat_count 1" in text and "lat_sum 1.5" in text
+    from repro.serving.telemetry import NULL_TELEMETRY
+
+    assert NULL_TELEMETRY.expfmt() == ""
+    assert NULL_TELEMETRY.quality is False
